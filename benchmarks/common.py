@@ -1,0 +1,34 @@
+"""Shared benchmark utilities: wall-clock timing of jitted callables and
+CSV emission (one row: name,us_per_call,derived)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10,
+            min_time_s: float = 0.2) -> float:
+    """Median-of-reps wall time per call, in microseconds."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    reps = []
+    total = 0.0
+    n = iters
+    while total < min_time_s and n > 0:
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        reps.append(dt)
+        total += dt
+        n -= 1
+    reps.sort()
+    return reps[len(reps) // 2] * 1e6
+
+
+def emit(name: str, us_per_call: Optional[float], derived: str = ""):
+    us = f"{us_per_call:.2f}" if us_per_call is not None else ""
+    print(f"{name},{us},{derived}", flush=True)

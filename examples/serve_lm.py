@@ -1,0 +1,34 @@
+"""Batched serving example: prefill + KV-cached greedy decode with the
+BatchServer (ring buffers on windowed layers), on a reduced gemma2-2b —
+exercising sliding-window + softcap + tied embeddings in the serve path.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import jax
+import numpy as np
+
+from repro import configs
+from repro.launch.serve import BatchServer, Request
+from repro.models import model as model_lib
+
+
+def main():
+    cfg = configs.get_smoke_config("gemma2-2b")
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    server = BatchServer(cfg, params, max_len=256)
+
+    rng = np.random.default_rng(0)
+    requests = [
+        Request(prompt=rng.integers(0, cfg.vocab, size=n).astype(np.int32),
+                max_new=12)
+        for n in (24, 17, 31, 8)   # ragged prompts, left-padded batch
+    ]
+    server.serve(requests)
+    for i, r in enumerate(requests):
+        assert r.out is not None and len(r.out) == 12
+        print(f"request {i} (prompt {len(r.prompt)} toks) -> {r.out}")
+    print("OK: batched prefill+decode served all requests")
+
+
+if __name__ == "__main__":
+    main()

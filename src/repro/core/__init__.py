@@ -1,0 +1,20 @@
+"""Squeeze core: NBB fractals, the lambda/nu space maps, and the compact
+stencil engines (the paper's primary contribution)."""
+from repro.core.fractals import (CARPET, CHANDELIER, EMPTY_BOTTLES, REGISTRY,
+                                 SIERPINSKI, VICSEK, NBBFractal, get_fractal)
+from repro.core.maps import (is_fractal, lambda_map, lambda_map_matmul,
+                             nu_map, nu_map_matmul, nu_with_membership)
+from repro.core.compact import (BlockLayout, MOORE_DIRS, compact_to_expanded,
+                                expanded_to_compact)
+from repro.core.stencil import (SqueezeBlockEngine, SqueezeCellEngine,
+                                make_engine)
+from repro.core.baselines import BBEngine, LambdaEngine, life_rule
+
+__all__ = [
+    "CARPET", "CHANDELIER", "EMPTY_BOTTLES", "REGISTRY", "SIERPINSKI",
+    "VICSEK", "NBBFractal", "get_fractal", "is_fractal", "lambda_map",
+    "lambda_map_matmul", "nu_map", "nu_map_matmul", "nu_with_membership",
+    "BlockLayout", "MOORE_DIRS", "compact_to_expanded", "expanded_to_compact",
+    "SqueezeBlockEngine", "SqueezeCellEngine", "make_engine", "BBEngine",
+    "LambdaEngine", "life_rule",
+]

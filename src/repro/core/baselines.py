@@ -1,0 +1,112 @@
+"""Baseline fractal engines the paper compares against (Section 4):
+
+  * ``BBEngine``      — the classic expanded bounding-box approach: both the
+                        parallel grid and the memory are the full n x n
+                        embedding (paper's approach 1).
+  * ``LambdaEngine``  — Navarro et al. [7]: compact *grid* (one unit of work
+                        per fractal cell, placed by lambda) but still
+                        *expanded memory* (paper's approach 2). Solves P1,
+                        not P2.
+
+Both simulate Conway's game of life adapted to the fractal: only fractal
+cells live or are counted as neighbors (holes and out-of-bounds read 0),
+with the standard B3/S23 rule applied on fractal cells only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import maps
+from repro.core.compact import MOORE_DIRS
+from repro.core.fractals import NBBFractal
+
+Array = jnp.ndarray
+
+
+def life_rule(alive: Array, neighbors: Array) -> Array:
+    """Conway B3/S23, uint8 in/out."""
+    born = neighbors == 3
+    survive = (alive > 0) & (neighbors == 2)
+    return (born | survive).astype(jnp.uint8)
+
+
+def _moore_counts(padded: Array) -> Array:
+    """Sum of the 8 Moore neighbors from a (+1)-padded 2D array."""
+    c = None
+    for dx, dy in MOORE_DIRS:
+        sl = padded[1 + dy: padded.shape[0] - 1 + dy,
+                    1 + dx: padded.shape[1] - 1 + dx]
+        c = sl.astype(jnp.int32) if c is None else c + sl
+    return c
+
+
+@dataclasses.dataclass(frozen=True)
+class BBEngine:
+    """Expanded grid + expanded memory (the classic approach)."""
+
+    frac: NBBFractal
+    r: int
+
+    def init_random(self, seed: int) -> Array:
+        n = self.frac.side(self.r)
+        mask = jnp.asarray(self.frac.mask(self.r))
+        bits = jax.random.bernoulli(jax.random.PRNGKey(seed), 0.5, (n, n))
+        return (bits & (mask > 0)).astype(jnp.uint8)
+
+    @partial(jax.jit, static_argnums=0)
+    def step(self, state: Array) -> Array:
+        mask = jnp.asarray(self.frac.mask(self.r))
+        padded = jnp.pad(state, 1)
+        nxt = life_rule(state, _moore_counts(padded))
+        return nxt * mask
+
+    def run(self, state: Array, steps: int) -> Array:
+        return jax.lax.fori_loop(0, steps, lambda _, s: self.step(s), state)
+
+    def memory_bytes(self, dtype_size: int = 1) -> int:
+        n = self.frac.side(self.r)
+        return n * n * dtype_size
+
+
+@dataclasses.dataclass(frozen=True)
+class LambdaEngine:
+    """Compact grid (via lambda), expanded memory — Navarro et al. [7].
+
+    Work is enumerated over the k^r compact coordinates; each one lambda-maps
+    to its expanded cell, reads its Moore neighborhood from expanded memory,
+    and writes the updated cell back to expanded memory.
+    """
+
+    frac: NBBFractal
+    r: int
+
+    def init_random(self, seed: int) -> Array:
+        return BBEngine(self.frac, self.r).init_random(seed)
+
+    @partial(jax.jit, static_argnums=0)
+    def step(self, state: Array) -> Array:
+        frac, r = self.frac, self.r
+        rows, cols = frac.compact_dims(r)
+        cy, cx = jnp.meshgrid(jnp.arange(rows, dtype=jnp.int32),
+                              jnp.arange(cols, dtype=jnp.int32), indexing="ij")
+        ex, ey = maps.lambda_map(frac, r, cx, cy)
+        padded = jnp.pad(state, 1)
+        count = jnp.zeros(ex.shape, jnp.int32)
+        for dx, dy in MOORE_DIRS:
+            count = count + padded[ey + 1 + dy, ex + 1 + dx].astype(jnp.int32)
+        alive = state[ey, ex]
+        nxt_vals = life_rule(alive, count)
+        # scatter back into (a fresh copy of) expanded memory
+        nxt = jnp.zeros_like(state)
+        return nxt.at[ey, ex].set(nxt_vals)
+
+    def run(self, state: Array, steps: int) -> Array:
+        return jax.lax.fori_loop(0, steps, lambda _, s: self.step(s), state)
+
+    def memory_bytes(self, dtype_size: int = 1) -> int:
+        n = self.frac.side(self.r)
+        return n * n * dtype_size

@@ -1,0 +1,207 @@
+"""Compact-domain layout helpers and block-level Squeeze (paper Section 3.5).
+
+Cell-level: the compact state is a dense ``(rows, cols)`` array,
+``rows = k^floor(r/2)``, ``cols = k^ceil(r/2)``; entry ``[cy, cx]`` is the
+fractal cell whose compact coordinate is ``(cx, cy)``.
+
+Block-level: with ``rho = s**m`` the fractal is handled as a level-``r_b``
+fractal of blocks (``r_b = r - m``); each block stores a rho x rho *expanded*
+micro-fractal tile (identical occupancy ``micro_mask`` in every block, by
+self-similarity). Block state is ``(n_blocks, rho, rho)`` with block id
+``by * cols_b + bx``. Cross-block neighbor access goes through a static
+block-neighbor table built with one lambda + 8 nu evaluations per block —
+the paper's maps hoisted to block granularity (see DESIGN.md Section 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import maps
+from repro.core.fractals import NBBFractal
+
+Array = jnp.ndarray
+
+#: Moore neighborhood directions (dx, dy), y growing downward.
+MOORE_DIRS: Tuple[Tuple[int, int], ...] = (
+    (-1, -1), (0, -1), (1, -1),
+    (-1, 0), (1, 0),
+    (-1, 1), (0, 1), (1, 1),
+)
+
+
+def compact_meshgrid(frac: NBBFractal, r: int) -> Tuple[Array, Array]:
+    """(cx, cy) int32 arrays of shape (rows, cols) covering D_c^2."""
+    rows, cols = frac.compact_dims(r)
+    cy, cx = jnp.meshgrid(jnp.arange(rows, dtype=jnp.int32),
+                          jnp.arange(cols, dtype=jnp.int32), indexing="ij")
+    return cx, cy
+
+
+def compact_to_expanded(frac: NBBFractal, r: int, state_c: Array) -> Array:
+    """Scatter a compact state into its (n, n) expanded embedding (holes 0)."""
+    n = frac.side(r)
+    cx, cy = compact_meshgrid(frac, r)
+    ex, ey = maps.lambda_map(frac, r, cx, cy)
+    out = jnp.zeros((n, n), dtype=state_c.dtype)
+    return out.at[ey, ex].set(state_c)
+
+
+def expanded_to_compact(frac: NBBFractal, r: int, state_e: Array) -> Array:
+    """Gather an expanded state into compact form (reads only fractal cells)."""
+    cx, cy = compact_meshgrid(frac, r)
+    ex, ey = maps.lambda_map(frac, r, cx, cy)
+    return state_e[ey, ex]
+
+
+# ======================================================================
+# block-level Squeeze
+# ======================================================================
+@dataclasses.dataclass(frozen=True)
+class BlockLayout:
+    """Static geometry of a block-level Squeeze decomposition."""
+
+    frac: NBBFractal
+    r: int
+    m: int  # rho = s**m
+
+    def __post_init__(self):
+        if not (0 <= self.m <= self.r):
+            raise ValueError(f"need 0 <= m <= r, got m={self.m}, r={self.r}")
+
+    def materialize(self) -> "BlockLayout":
+        """Build all static geometry eagerly. Engines call this at
+        construction (outside jit): a lazy first touch inside a traced
+        step() would try to np.asarray() tracers. Kept out of
+        __post_init__ so analytic uses (memory_bytes etc.) stay O(1)."""
+        _ = self.micro_mask, self.block_coords
+        _ = self.block_origin_expanded, self.neighbor_table
+        return self
+
+    @property
+    def rho(self) -> int:
+        return self.frac.s ** self.m
+
+    @property
+    def r_b(self) -> int:
+        return self.r - self.m
+
+    @property
+    def block_dims(self) -> Tuple[int, int]:
+        """(rows_b, cols_b) of the compact block domain."""
+        return self.frac.compact_dims(self.r_b)
+
+    @property
+    def n_blocks(self) -> int:
+        return self.frac.volume(self.r_b)
+
+    @property
+    def ghost(self) -> int:
+        """Sentinel block id used for out-of-fractal neighbors."""
+        return self.n_blocks
+
+    @functools.cached_property
+    def micro_mask(self) -> np.ndarray:
+        """(rho, rho) uint8 occupancy of the level-m micro-fractal, [y, x]."""
+        return self.frac.mask(self.m)
+
+    @functools.cached_property
+    def block_coords(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Flat (n_blocks,) compact block coordinates (bx, by), id-ordered."""
+        rows_b, cols_b = self.block_dims
+        by, bx = np.meshgrid(np.arange(rows_b, dtype=np.int32),
+                             np.arange(cols_b, dtype=np.int32), indexing="ij")
+        return bx.reshape(-1), by.reshape(-1)
+
+    @functools.cached_property
+    def block_origin_expanded(self) -> np.ndarray:
+        """(n_blocks, 2) int32 cell-level expanded origin (x, y) per block."""
+        bx, by = self.block_coords
+        ex, ey = maps.lambda_map(self.frac, self.r_b,
+                                 jnp.asarray(bx), jnp.asarray(by))
+        return np.stack([np.asarray(ex), np.asarray(ey)], axis=1) * self.rho
+
+    @functools.cached_property
+    def neighbor_table(self) -> np.ndarray:
+        """(n_blocks, 8) int32 compact block id per Moore direction.
+
+        Built with the paper's maps at block granularity: one lambda per
+        block, one nu per (block, direction); out-of-fractal neighbors get
+        the ``ghost`` sentinel (a zero block is appended before gathers).
+        """
+        frac, r_b = self.frac, self.r_b
+        bx, by = (jnp.asarray(a) for a in self.block_coords)
+        ex, ey = maps.lambda_map(frac, r_b, bx, by)
+        _, cols_b = self.block_dims
+        table = np.empty((self.n_blocks, 8), dtype=np.int32)
+        for d, (dx, dy) in enumerate(MOORE_DIRS):
+            nx, ny = ex + dx, ey + dy
+            valid = maps.is_fractal(frac, r_b, nx, ny)
+            cx, cy = maps.nu_map(frac, r_b,
+                                 jnp.clip(nx, 0, frac.side(r_b) - 1),
+                                 jnp.clip(ny, 0, frac.side(r_b) - 1))
+            ids = jnp.where(valid, cy * cols_b + cx, self.ghost)
+            table[:, d] = np.asarray(ids, dtype=np.int32)
+        return table
+
+    # ------------------------------------------------------------ conversions
+    def to_expanded(self, state_b: Array) -> Array:
+        """Block state (n_blocks, rho, rho) -> (n, n) expanded embedding."""
+        n = self.frac.side(self.r)
+        org = jnp.asarray(self.block_origin_expanded)  # (n_blocks, 2)
+        rho = self.rho
+        iy, ix = jnp.meshgrid(jnp.arange(rho), jnp.arange(rho), indexing="ij")
+        # absolute cell coords per (block, i, j)
+        ax = org[:, 0, None, None] + ix[None]
+        ay = org[:, 1, None, None] + iy[None]
+        out = jnp.zeros((n, n), dtype=state_b.dtype)
+        return out.at[ay, ax].set(state_b)
+
+    def from_expanded(self, state_e: Array) -> Array:
+        """(n, n) expanded embedding -> block state (n_blocks, rho, rho)."""
+        org = jnp.asarray(self.block_origin_expanded)
+        rho = self.rho
+        iy, ix = jnp.meshgrid(jnp.arange(rho), jnp.arange(rho), indexing="ij")
+        ax = org[:, 0, None, None] + ix[None]
+        ay = org[:, 1, None, None] + iy[None]
+        mask = jnp.asarray(self.micro_mask)[None]
+        return state_e[ay, ax] * mask.astype(state_e.dtype)
+
+    def pad_with_halo(self, state_b: Array) -> Array:
+        """Assemble (n_blocks, rho+2, rho+2) tiles with Moore halos.
+
+        Gathers only the needed strips (edge rows/cols, corner cells) from
+        each neighbor block via the static table; ghost neighbors read as 0.
+        """
+        rho = self.rho
+        nb = self.n_blocks
+        # one zero ghost block appended: sentinel gathers read zeros.
+        padded_src = jnp.concatenate(
+            [state_b, jnp.zeros((1, rho, rho), state_b.dtype)], axis=0)
+        table = jnp.asarray(self.neighbor_table)  # (nb, 8)
+
+        out = jnp.zeros((nb, rho + 2, rho + 2), state_b.dtype)
+        out = out.at[:, 1:-1, 1:-1].set(state_b)
+
+        def nbr(d):  # (nb, rho, rho) neighbor-block contents for direction d
+            return jnp.take(padded_src, table[:, d], axis=0)
+
+        # MOORE_DIRS order: NW, N, NE, W, E, SW, S, SE
+        nw, n_, ne, w_, e_, sw, s_, se = (nbr(d) for d in range(8))
+        out = out.at[:, 0, 0].set(nw[:, -1, -1])
+        out = out.at[:, 0, 1:-1].set(n_[:, -1, :])
+        out = out.at[:, 0, -1].set(ne[:, -1, 0])
+        out = out.at[:, 1:-1, 0].set(w_[:, :, -1])
+        out = out.at[:, 1:-1, -1].set(e_[:, :, 0])
+        out = out.at[:, -1, 0].set(sw[:, 0, -1])
+        out = out.at[:, -1, 1:-1].set(s_[:, 0, :])
+        out = out.at[:, -1, -1].set(se[:, 0, 0])
+        return out
+
+    def memory_bytes(self, dtype_size: int = 1) -> int:
+        """Squeeze block-level state bytes (paper Table 2's nu column)."""
+        return self.n_blocks * self.rho * self.rho * dtype_size

@@ -1,0 +1,151 @@
+"""3D extension of Squeeze (the paper's §5 future work): NBB fractals in
+three dimensions, with the lambda/nu space maps generalised to a 3-axis
+digit interleaving.
+
+A 3D NBB fractal F^{k,s} places k replicas on slots of an s x s x s grid.
+Compact packing cycles the axes: level mu contributes its base-k digit to
+axis (mu-1) mod 3 (x, y, z in turn), at digit position (mu-1) // 3 — the
+direct generalisation of the paper's odd/even x/y alternation. The
+compact box is k^ceil(r/3) x k^ceil((r-1)/3) x k^floor(r/3) and holds
+exactly V = k^r cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+Coord3 = Tuple[int, int, int]
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class NBBFractal3D:
+    name: str
+    s: int
+    positions: Tuple[Coord3, ...]  # (x, y, z) slots; order = enumeration
+
+    def __post_init__(self):
+        seen = set()
+        for pos in self.positions:
+            assert len(pos) == 3 and all(0 <= c < self.s for c in pos), pos
+            assert pos not in seen, pos
+            seen.add(pos)
+
+    @property
+    def k(self) -> int:
+        return len(self.positions)
+
+    def side(self, r: int) -> int:
+        return self.s ** r
+
+    def volume(self, r: int) -> int:
+        return self.k ** r
+
+    def compact_dims(self, r: int) -> Tuple[int, int, int]:
+        """(nx, ny, nz): axis a holds the digits of levels a+1, a+4, ..."""
+        return tuple(self.k ** ((r - a + 2) // 3) for a in range(3))
+
+    def mrf(self, r: int) -> float:
+        """Memory reduction vs the s^3r bounding volume."""
+        return float(self.s ** (3 * r)) / float(self.k ** r)
+
+    @functools.cached_property
+    def h_lambda(self) -> np.ndarray:
+        return np.asarray(self.positions, dtype=np.int32)  # (k, 3)
+
+    @functools.cached_property
+    def h_nu(self) -> np.ndarray:
+        """(s, s, s) indexed [z, y, x] -> replica id, -1 for holes."""
+        t = np.full((self.s,) * 3, -1, dtype=np.int32)
+        for i, (x, y, z) in enumerate(self.positions):
+            t[z, y, x] = i
+        return t
+
+    def mask(self, r: int) -> np.ndarray:
+        """(n, n, n) uint8 occupancy, [z, y, x], by 3D self-similarity."""
+        g = (self.h_nu >= 0).astype(np.uint8)
+        m = np.ones((1, 1, 1), np.uint8)
+        for _ in range(r):
+            m = np.kron(g, m)
+        return m
+
+
+# ---------------------------------------------------------------- the maps
+def lambda3_map(frac: NBBFractal3D, r: int, cx: Array, cy: Array, cz: Array
+                ) -> Tuple[Array, Array, Array]:
+    """Compact (cx, cy, cz) -> expanded (ex, ey, ez)."""
+    h = jnp.asarray(frac.h_lambda)
+    comp = [cx.astype(jnp.int32), cy.astype(jnp.int32),
+            cz.astype(jnp.int32)]
+    out = [jnp.zeros_like(comp[0]) for _ in range(3)]
+    for mu in range(1, r + 1):
+        axis = (mu - 1) % 3
+        digit = (mu - 1) // 3
+        beta = (comp[axis] // (frac.k ** digit)) % frac.k
+        tau = h[beta]  # (..., 3)
+        scale = frac.s ** (mu - 1)
+        for a in range(3):
+            out[a] = out[a] + tau[..., a] * scale
+    return tuple(out)
+
+
+def _nu3_codes(frac: NBBFractal3D, r: int, ex: Array, ey: Array, ez: Array
+               ) -> Array:
+    hn = jnp.asarray(frac.h_nu)
+    e = [ex.astype(jnp.int32), ey.astype(jnp.int32), ez.astype(jnp.int32)]
+    codes = []
+    for mu in range(1, r + 1):
+        scale = frac.s ** (mu - 1)
+        tx = (e[0] // scale) % frac.s
+        ty = (e[1] // scale) % frac.s
+        tz = (e[2] // scale) % frac.s
+        codes.append(hn[tz, ty, tx])
+    return jnp.stack(codes, axis=-1)
+
+
+def nu3_map(frac: NBBFractal3D, r: int, ex: Array, ey: Array, ez: Array
+            ) -> Tuple[Array, Array, Array]:
+    """Expanded -> compact (inverse of lambda3 on fractal cells)."""
+    codes = jnp.maximum(_nu3_codes(frac, r, ex, ey, ez), 0)
+    out = [jnp.zeros(ex.shape, jnp.int32) for _ in range(3)]
+    for mu in range(1, r + 1):
+        axis = (mu - 1) % 3
+        delta = frac.k ** ((mu - 1) // 3)
+        out[axis] = out[axis] + codes[..., mu - 1] * delta
+    return tuple(out)
+
+
+def is_fractal3(frac: NBBFractal3D, r: int, ex: Array, ey: Array, ez: Array
+                ) -> Array:
+    n = frac.side(r)
+    inb = ((ex >= 0) & (ex < n) & (ey >= 0) & (ey < n)
+           & (ez >= 0) & (ez < n))
+    codes = _nu3_codes(frac, r, jnp.clip(ex, 0, n - 1),
+                       jnp.clip(ey, 0, n - 1), jnp.clip(ez, 0, n - 1))
+    return inb & jnp.all(codes >= 0, axis=-1)
+
+
+# ---------------------------------------------------------------- registry
+def _cube_except(s: int, holes) -> Tuple[Coord3, ...]:
+    hs = set(holes)
+    return tuple((x, y, z) for z in range(s) for y in range(s)
+                 for x in range(s) if (x, y, z) not in hs)
+
+
+#: Menger sponge F^{20,3}: 3x3x3 minus the 6 face centers and the center.
+MENGER = NBBFractal3D(
+    "menger", s=3,
+    positions=_cube_except(3, [(1, 1, 1), (0, 1, 1), (2, 1, 1),
+                               (1, 0, 1), (1, 2, 1), (1, 1, 0), (1, 1, 2)]))
+
+#: Discrete Sierpinski tetrahedron F^{4,2} (cube-corner embedding).
+SIERPINSKI3D = NBBFractal3D(
+    "sierpinski3d", s=2,
+    positions=((0, 0, 0), (1, 0, 0), (0, 1, 0), (0, 0, 1)))
+
+REGISTRY3D: Dict[str, NBBFractal3D] = {f.name: f
+                                       for f in (MENGER, SIERPINSKI3D)}

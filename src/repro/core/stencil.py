@@ -1,0 +1,119 @@
+"""Squeeze engines: stencil simulation entirely in compact space (paper
+Sections 3.2-3.5).
+
+  * ``SqueezeCellEngine``  — the paper-faithful per-cell scheme: one lambda
+    per cell, one (fused) nu + membership test per neighbor, gathers from
+    the compact state. Memory = k^r cells.
+  * ``SqueezeBlockEngine`` — block-level Squeeze (Section 3.5): maps run at
+    block granularity; each block is a rho x rho expanded micro-fractal.
+    The static block-neighbor table (built once with the maps; see
+    DESIGN.md Section 2 for the TPU-native restructure) turns the step
+    into halo-gather + dense in-tile stencil.
+
+Both produce states convertible to the same expanded embedding as the
+baselines (tests assert step-for-step equivalence).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import maps
+from repro.core.baselines import BBEngine, life_rule, _moore_counts
+from repro.core.compact import (BlockLayout, MOORE_DIRS, compact_meshgrid,
+                                compact_to_expanded, expanded_to_compact)
+from repro.core.fractals import NBBFractal
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class SqueezeCellEngine:
+    """Paper-faithful compact-space engine (thread-level Squeeze)."""
+
+    frac: NBBFractal
+    r: int
+
+    def init_random(self, seed: int) -> Array:
+        expanded = BBEngine(self.frac, self.r).init_random(seed)
+        return expanded_to_compact(self.frac, self.r, expanded)
+
+    def to_expanded(self, state: Array) -> Array:
+        return compact_to_expanded(self.frac, self.r, state)
+
+    @partial(jax.jit, static_argnums=0)
+    def step(self, state: Array) -> Array:
+        frac, r = self.frac, self.r
+        cx, cy = compact_meshgrid(frac, r)
+        # 1 lambda per cell: where am I in (virtual) expanded space?
+        ex, ey = maps.lambda_map(frac, r, cx, cy)
+        count = jnp.zeros(state.shape, jnp.int32)
+        for dx, dy in MOORE_DIRS:
+            # 1 nu (+ membership, fused — same digit pass) per neighbor
+            nx, ny, valid = maps.nu_with_membership(frac, r, ex + dx, ey + dy)
+            val = state[ny, nx].astype(jnp.int32)
+            count = count + jnp.where(valid, val, 0)
+        return life_rule(state, count)
+
+    def run(self, state: Array, steps: int) -> Array:
+        return jax.lax.fori_loop(0, steps, lambda _, s: self.step(s), state)
+
+    def memory_bytes(self, dtype_size: int = 1) -> int:
+        rows, cols = self.frac.compact_dims(self.r)
+        return rows * cols * dtype_size
+
+
+@dataclasses.dataclass(frozen=True)
+class SqueezeBlockEngine:
+    """Block-level Squeeze (paper Section 3.5) with a static neighbor table."""
+
+    layout: BlockLayout
+
+    def __post_init__(self):
+        self.layout.materialize()
+
+    @property
+    def frac(self) -> NBBFractal:
+        return self.layout.frac
+
+    @property
+    def r(self) -> int:
+        return self.layout.r
+
+    def init_random(self, seed: int) -> Array:
+        expanded = BBEngine(self.frac, self.r).init_random(seed)
+        return self.layout.from_expanded(expanded)
+
+    def to_expanded(self, state: Array) -> Array:
+        return self.layout.to_expanded(state)
+
+    @partial(jax.jit, static_argnums=0)
+    def step(self, state: Array) -> Array:
+        padded = self.layout.pad_with_halo(state)  # (nb, rho+2, rho+2)
+        counts = jax.vmap(_moore_counts)(padded)
+        nxt = life_rule(state, counts)
+        mask = jnp.asarray(self.layout.micro_mask)[None]
+        return nxt * mask
+
+    def run(self, state: Array, steps: int) -> Array:
+        return jax.lax.fori_loop(0, steps, lambda _, s: self.step(s), state)
+
+    def memory_bytes(self, dtype_size: int = 1) -> int:
+        return self.layout.memory_bytes(dtype_size)
+
+
+def make_engine(kind: str, frac: NBBFractal, r: int, m: int = 0):
+    """Engine factory: kind in {'bb', 'lambda', 'cell', 'block'}."""
+    from repro.core.baselines import LambdaEngine
+    if kind == "bb":
+        return BBEngine(frac, r)
+    if kind == "lambda":
+        return LambdaEngine(frac, r)
+    if kind == "cell":
+        return SqueezeCellEngine(frac, r)
+    if kind == "block":
+        return SqueezeBlockEngine(BlockLayout(frac, r, m))
+    raise ValueError(f"unknown engine kind {kind!r}")

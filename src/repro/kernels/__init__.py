@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical hot spots: the MXU-encoded
+space maps (the paper's tensor-core contribution), the fused block-level
+compact stencil, and blocked flash attention for the LM substrate.
+
+Layout per kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrappers), ref.py (pure-jnp oracles used by the allclose tests)."""
+from repro.kernels.ops import (default_interpret, flash_attention,
+                               lambda_map_tc, life_step_blocks,
+                               life_step_strips, nu_map_tc)
+
+__all__ = ["default_interpret", "flash_attention", "lambda_map_tc",
+           "life_step_blocks", "life_step_strips", "nu_map_tc"]

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel for the lambda(w) map — the [7]-style tensor-core
+encoding on the MXU (see nu_map.py for the scheme; lambda uses a (TILE, 2r)
+code matrix [tau_x | tau_y] against a block-diagonal weight matrix)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.fractals import NBBFractal
+from repro.core.maps import lambda_weight_matrix
+
+RPAD = 128
+LANES = 128
+
+
+def _lambda_kernel(coords_ref, w_ref, out_ref, *, frac: NBBFractal, r: int):
+    """coords_ref: (2, TILE) int32 [cx; cy]; w_ref: (RPAD, LANES) fp32
+    -> out_ref: (2, TILE) int32 [ex; ey]."""
+    cx = coords_ref[0, :]
+    cy = coords_ref[1, :]
+
+    tx_cols, ty_cols = [], []
+    for mu in range(1, r + 1):
+        w = cx if (mu % 2 == 1) else cy
+        beta = (w // (frac.k ** ((mu - 1) // 2))) % frac.k
+        # arithmetic H_lambda: tau(beta) via one-hot over replica indices
+        tx = jnp.zeros_like(beta)
+        ty = jnp.zeros_like(beta)
+        for i, (px, py) in enumerate(frac.positions):
+            hit = (beta == i).astype(jnp.int32)
+            tx = tx + px * hit
+            ty = ty + py * hit
+        tx_cols.append(tx.astype(jnp.float32))
+        ty_cols.append(ty.astype(jnp.float32))
+
+    codes = jnp.stack(tx_cols + ty_cols, axis=1)  # (TILE, 2r)
+    codes = jnp.pad(codes, ((0, 0), (0, RPAD - 2 * r)))
+
+    res = jax.lax.dot_general(
+        codes, w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    out_ref[0, :] = res[:, 0].astype(jnp.int32)
+    out_ref[1, :] = res[:, 1].astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("frac", "r", "tile", "interpret"))
+def lambda_map_pallas(frac: NBBFractal, r: int, cx, cy, *,
+                      tile: int = 256, interpret: bool = True):
+    """MXU-encoded lambda(w) over a batch of compact coordinates."""
+    if 2 * r > RPAD:
+        raise ValueError(f"2r={2*r} exceeds the padded contraction dim {RPAD}")
+    shape = cx.shape
+    flat_n = 1
+    for d in shape:
+        flat_n *= d
+    npad = max(tile, ((flat_n + tile - 1) // tile) * tile)
+    coords = jnp.zeros((2, npad), jnp.int32)
+    coords = coords.at[0, :flat_n].set(cx.reshape(-1).astype(jnp.int32))
+    coords = coords.at[1, :flat_n].set(cy.reshape(-1).astype(jnp.int32))
+
+    import numpy as np
+    w = np.zeros((RPAD, LANES), np.float32)
+    w[:2 * r, :2] = lambda_weight_matrix(frac, r)
+
+    out = pl.pallas_call(
+        functools.partial(_lambda_kernel, frac=frac, r=r),
+        grid=(npad // tile,),
+        in_specs=[pl.BlockSpec((2, tile), lambda i: (0, i)),
+                  pl.BlockSpec((RPAD, LANES), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((2, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((2, npad), jnp.int32),
+        interpret=interpret,
+    )(coords, jnp.asarray(w))
+    ex = out[0, :flat_n].reshape(shape)
+    ey = out[1, :flat_n].reshape(shape)
+    return ex, ey

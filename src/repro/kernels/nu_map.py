@@ -1,0 +1,105 @@
+"""Pallas TPU kernel for the nu(w) map — the paper's tensor-core encoding
+(Section 3.6, Eqs. 15-16) adapted to the MXU.
+
+Per grid step one coordinate tile is processed:
+  1. VPU pass: extract the per-level base-s digit pair theta_mu of every
+     coordinate and resolve H_nu[theta_mu] *arithmetically* (a k-term
+     one-hot sum — TPU-idiomatic, no in-kernel gather), building the code
+     matrix ``codes`` (TILE, 128) fp32 (r levels, zero-padded).
+  2. MXU pass: one ``dot`` against the constant weight matrix W (128, 128)
+     whose first two columns hold Delta^nu_mu * f_{x|y}(mu) — the paper's
+     MMA ``A`` operand, here sized to the 128x128 systolic array instead of
+     the WMMA 16x16 fragment.
+
+fp32 accumulation is exact for all supported sizes (products < 2**24);
+membership (``valid``) falls out of the same digit pass for free.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.fractals import NBBFractal
+from repro.core.maps import nu_weight_matrix
+
+RPAD = 128  # contraction dim padded to the MXU systolic width
+LANES = 128
+
+
+def _nu_kernel(coords_ref, w_ref, out_ref, *, frac: NBBFractal, r: int,
+               n: int):
+    """coords_ref: (2, TILE) int32 [ex; ey]; w_ref: (RPAD, LANES) fp32 weight
+    matrix -> out_ref: (3, TILE) int32 [cx; cy; valid]."""
+    ex = coords_ref[0, :]
+    ey = coords_ref[1, :]
+    in_bounds = (ex >= 0) & (ex < n) & (ey >= 0) & (ey < n)
+    exc = jnp.clip(ex, 0, n - 1)
+    eyc = jnp.clip(ey, 0, n - 1)
+
+    cols = []
+    occupied = in_bounds
+    for mu in range(1, r + 1):
+        scale = frac.s ** (mu - 1)
+        tx = (exc // scale) % frac.s
+        ty = (eyc // scale) % frac.s
+        # arithmetic H_nu: one-hot over the k replica slots (no gather)
+        code = jnp.zeros_like(tx)
+        occ = jnp.zeros_like(tx, dtype=jnp.bool_)
+        for i, (px, py) in enumerate(frac.positions):
+            hit = (tx == px) & (ty == py)
+            code = code + i * hit.astype(jnp.int32)
+            occ = occ | hit
+        occupied = occupied & occ
+        cols.append(code.astype(jnp.float32))
+
+    codes = jnp.stack(cols, axis=1)  # (TILE, r)
+    codes = jnp.pad(codes, ((0, 0), (0, RPAD - r)))  # (TILE, 128)
+
+    res = jax.lax.dot_general(  # the MXU MMA (paper Eq. 15-16)
+        codes, w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)  # (TILE, 128)
+
+    out_ref[0, :] = res[:, 0].astype(jnp.int32)
+    out_ref[1, :] = res[:, 1].astype(jnp.int32)
+    out_ref[2, :] = occupied.astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("frac", "r", "tile", "interpret"))
+def nu_map_pallas(frac: NBBFractal, r: int, ex, ey, *,
+                  tile: int = 256, interpret: bool = True):
+    """MXU-encoded nu(w) over a batch of expanded coordinates.
+
+    Returns (cx, cy, valid) with the same leading shape as ex/ey.
+    """
+    if r > RPAD:
+        raise ValueError(f"r={r} exceeds the padded contraction dim {RPAD}")
+    shape = ex.shape
+    flat_n = 1
+    for d in shape:
+        flat_n *= d
+    npad = max(tile, ((flat_n + tile - 1) // tile) * tile)
+    coords = jnp.zeros((2, npad), jnp.int32)
+    coords = coords.at[0, :flat_n].set(ex.reshape(-1).astype(jnp.int32))
+    coords = coords.at[1, :flat_n].set(ey.reshape(-1).astype(jnp.int32))
+
+    import numpy as np
+    w = np.zeros((RPAD, LANES), np.float32)
+    w[:r, :2] = nu_weight_matrix(frac, r)
+
+    out = pl.pallas_call(
+        functools.partial(_nu_kernel, frac=frac, r=r, n=frac.side(r)),
+        grid=(npad // tile,),
+        in_specs=[pl.BlockSpec((2, tile), lambda i: (0, i)),
+                  pl.BlockSpec((RPAD, LANES), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((3, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((3, npad), jnp.int32),
+        interpret=interpret,
+    )(coords, jnp.asarray(w))
+    cx = out[0, :flat_n].reshape(shape)
+    cy = out[1, :flat_n].reshape(shape)
+    valid = out[2, :flat_n].reshape(shape).astype(jnp.bool_)
+    return cx, cy, valid

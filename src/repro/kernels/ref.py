@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's tests sweep shapes/dtypes and assert_allclose (or exact
+equality, for the integer space maps) against these references.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import maps
+from repro.core.compact import BlockLayout
+from repro.core.fractals import NBBFractal
+from repro.core.baselines import life_rule, _moore_counts
+
+Array = jnp.ndarray
+
+
+def nu_ref(frac: NBBFractal, r: int, ex: Array, ey: Array
+           ) -> Tuple[Array, Array, Array]:
+    """Oracle for the nu kernel: (cx, cy, valid) via the integer path."""
+    return maps.nu_with_membership(frac, r, ex, ey)
+
+
+def lambda_ref(frac: NBBFractal, r: int, cx: Array, cy: Array
+               ) -> Tuple[Array, Array]:
+    """Oracle for the lambda kernel."""
+    return maps.lambda_map(frac, r, cx, cy)
+
+
+def life_blocks_ref(layout: BlockLayout, state: Array) -> Array:
+    """Oracle for the fused block-level game-of-life step kernels."""
+    import jax
+    padded = layout.pad_with_halo(state)
+    counts = jax.vmap(_moore_counts)(padded)
+    nxt = life_rule(state, counts)
+    return nxt * jnp.asarray(layout.micro_mask)[None]
+
+
+def ssd_ref(x: Array, dt: Array, a: Array, bm: Array, cm: Array,
+            chunk: int) -> Array:
+    """Oracle for the SSD chunk kernel: the pure-jnp chunked scan from
+    models/ssm.py (n_groups=1; bm/cm (B,S,N))."""
+    from repro.models.ssm import _ssd_chunked
+    return _ssd_chunked(x, dt, a, bm[:, :, None, :], cm[:, :, None, :],
+                        chunk)
+
+
+def attention_ref(q: Array, k: Array, v: Array, *,
+                  causal: bool = True,
+                  window: Optional[int] = None,
+                  softcap: Optional[float] = None) -> Array:
+    """Oracle for the flash attention kernel.
+
+    q: (B, H, Sq, D); k, v: (B, H, Sk, D) (kv heads already broadcast to H).
+    Sliding ``window`` means key positions in (qpos - window, qpos].
+    """
+    *_, sq, d = q.shape
+    sk = k.shape[-2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)  # right-aligned (decode-friendly)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

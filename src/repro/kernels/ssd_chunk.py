@@ -1,0 +1,133 @@
+"""Pallas TPU kernel for the Mamba-2 SSD intra-chunk block — the
+attention-free archs' compute hot spot (the quadratic-in-chunk "duality"
+matmuls of [arXiv:2405.21060], Listing 1).
+
+Per grid step, one (batch, chunk) pair is processed entirely in VMEM:
+
+    scores  = (C B^T) ⊙ exp(segsum(dA)) ⊙ dt        (L, L) per head
+    y_diag  = scores @ x                              MXU
+    w       = exp(dA_L - dA) * dt
+    state   = (w ⊙ x)^T @ B                           MXU (chunk-final)
+
+The inter-chunk linear recurrence (tiny: one (H,P,N) state per chunk)
+stays in XLA — it is sequential and bandwidth-trivial. ops.ssd_chunk_scan
+composes kernel + recurrence and matches models/ssm._ssd_chunked exactly
+(ref.ssd_ref), which is also the oracle used by the tests.
+
+Heads are grouped n_groups=1 style: B/C shared across heads (the Mamba-2
+default), looped per-head inside the kernel (h <= 48 for mamba2-780m;
+each head's tiles are (L, L)/(L, P)/(L, N) — MXU-aligned at L=128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jnp.ndarray
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                      y_ref, state_ref, *, nheads: int):
+    """Blocks: x (1,L,H,P), dt (1,L,H), a (1,H) [dt*A premultiplied is NOT
+    passed; a holds A per head], b/c (1,L,N) -> y (1,L,H,P),
+    state (1,H,P,N)."""
+    x = x_ref[0].astype(jnp.float32)          # (L, H, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (L, H)
+    a = a_ref[0].astype(jnp.float32)          # (H,)
+    bm = b_ref[0].astype(jnp.float32)         # (L, N)
+    cm = c_ref[0].astype(jnp.float32)         # (L, N)
+    ll = x.shape[0]
+
+    da = dt * a[None, :]                      # (L, H)
+    da_cs = jnp.cumsum(da, axis=0)            # (L, H)
+    cb = jax.lax.dot_general(                 # (L, L), shared across heads
+        cm, bm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    tri = jnp.tril(jnp.ones((ll, ll), jnp.bool_))
+
+    for h in range(nheads):                   # unrolled; each iter is MXU work
+        seg = da_cs[:, h][:, None] - da_cs[:, h][None, :]
+        decay = jnp.where(tri, jnp.exp(seg), 0.0)
+        scores = cb * decay * dt[:, h][None, :]        # (L, L)
+        y_h = jax.lax.dot_general(                     # (L, P)
+            scores, x[:, h, :], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        y_ref[0, :, h, :] = y_h
+        w = jnp.exp(da_cs[-1, h] - da_cs[:, h]) * dt[:, h]   # (L,)
+        xw = x[:, h, :] * w[:, None]                   # (L, P)
+        state_ref[0, h] = jax.lax.dot_general(         # (P, N)
+            xw, bm, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "interpret"))
+def ssd_chunk_scan(x: Array, dt: Array, a: Array, bm: Array, cm: Array, *,
+                   chunk: int = 128, interpret: bool = True) -> Array:
+    """Full SSD scan: Pallas intra-chunk kernel + XLA inter-chunk
+    recurrence. x (B,S,H,P); dt (B,S,H) fp32 post-softplus; a (H,)
+    negative; bm/cm (B,S,N) (n_groups=1). Returns (B,S,H,P) fp32."""
+    b, s, h, p = x.shape
+    n = bm.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+
+    xc = x.reshape(b * nc, chunk, h, p)
+    dtc = dt.reshape(b * nc, chunk, h)
+    bc = bm.reshape(b * nc, chunk, n)
+    cc = cm.reshape(b * nc, chunk, n)
+    a2 = jnp.broadcast_to(a.astype(jnp.float32)[None], (b * nc, h))
+
+    kernel = functools.partial(_ssd_chunk_kernel, nheads=h)
+    y_diag, states = pl.pallas_call(
+        kernel,
+        grid=(b * nc,),
+        in_specs=[
+            pl.BlockSpec((1, chunk, h, p), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, chunk, h), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, h), lambda i: (i, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, h, p), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, h, p, n), lambda i: (i, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * nc, chunk, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b * nc, h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xc, dtc, a2, bc, cc)
+
+    # ---- inter-chunk recurrence + off-diagonal contribution (XLA)
+    y_diag = y_diag.reshape(b, nc, chunk, h, p)
+    states = states.reshape(b, nc, h, p, n)
+    da = dt.reshape(b, nc, chunk, h).astype(jnp.float32) \
+        * a.astype(jnp.float32)[None, None, None, :]
+    da_cs = jnp.cumsum(da, axis=2)                       # (b,nc,L,h)
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])            # (b,nc,h)
+
+    def scan_fn(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry
+    _, prev = jax.lax.scan(
+        scan_fn, jnp.zeros((b, h, p, n), jnp.float32),
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev = prev.transpose(1, 0, 2, 3, 4)                 # (b,nc,h,p,n)
+
+    cmr = cm.reshape(b, nc, chunk, n).astype(jnp.float32)
+    y_off = jnp.einsum("bcln,bchpn->bclhp", cmr, prev) \
+        * jnp.exp(da_cs)[..., None]
+    y = (y_diag + y_off).reshape(b, sp, h, p)
+    return y[:, :s]

@@ -1,0 +1,155 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax -----------------------------------
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+"""Multi-pod dry-run: .lower().compile() every (architecture x input-shape
+x mesh) cell against the production mesh with 512 placeholder host
+devices; print memory_analysis() (proves it fits) and cost_analysis()
+(FLOPs/bytes for the roofline), plus the parsed collective schedule.
+
+Run one cell:   python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k [--multi-pod]
+Run the matrix: python -m repro.launch.dryrun --all --out results.jsonl
+(The matrix driver execs one fresh process per cell so compile arenas are
+reclaimed between 100B-scale lowers.)
+"""
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             data: int = 16, model: int = 16,
+             seq_shard: bool = False, kv_quant: bool = False,
+             accum: int = 1) -> dict:
+    import jax
+    from repro.launch import mesh as mesh_lib
+    from repro.launch import specs as specs_lib
+    from repro.utils import hlo as hlo_lib
+
+    t0 = time.time()
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod, data=data,
+                                         model=model)
+    n_chips = mesh.size
+    fn, args, in_sh, donate, meta = specs_lib.build_cell(
+        arch, shape, mesh, seq_shard=seq_shard, kv_quant=kv_quant,
+        accum_steps=accum)
+
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    print(f"== {arch} x {shape} on {'multi-pod 2x16x16' if multi_pod else 'single-pod 16x16'} ({n_chips} chips)")
+    print(mem)
+    ca = compiled.cost_analysis() or {}
+    print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
+
+    txt = compiled.as_text()
+    coll = hlo_lib.collective_bytes(txt)
+    mf = specs_lib.model_flops_for(meta["cfg"], shape)
+    roof = hlo_lib.roofline_from_compiled(compiled, n_chips,
+                                          model_flops=mf, hlo_text=txt)
+
+    def _b(x):
+        return int(x) if x else 0
+
+    per_dev_bytes = (_b(getattr(mem, "argument_size_in_bytes", 0))
+                     + _b(getattr(mem, "temp_size_in_bytes", 0))
+                     + _b(getattr(mem, "output_size_in_bytes", 0))
+                     - _b(getattr(mem, "alias_size_in_bytes", 0)))
+    mesh_name = (f"2x{data}x{model}" if multi_pod else f"{data}x{model}")
+    row = {
+        "arch": arch, "shape": shape,
+        "mesh": mesh_name,
+        "n_chips": n_chips,
+        "ok": True,
+        "per_device_bytes": per_dev_bytes,
+        "collectives": coll,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        **roof.row(),
+    }
+    print(json.dumps(row))
+    return row
+
+
+ALL_CELLS_NOTE = """Matrix: 10 archs x 4 shapes, long_500k only for
+sub-quadratic archs (DESIGN.md §Arch-applicability), x 2 meshes."""
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--data", type=int, default=16,
+                    help="data-axis size (perf experiments)")
+    ap.add_argument("--model", type=int, default=16,
+                    help="model-axis size (perf experiments)")
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="Megatron-SP activation boundaries (perf)")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache (perf; decode cells)")
+    ap.add_argument("--accum", type=int, default=1,
+                    help="gradient-accumulation microbatches (perf)")
+    ap.add_argument("--all", action="store_true", help=ALL_CELLS_NOTE)
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    ap.add_argument("--meshes", default="single,multi",
+                    help="comma list: single,multi")
+    args = ap.parse_args()
+
+    if not args.all:
+        row = run_cell(args.arch, args.shape, args.multi_pod,
+                       data=args.data, model=args.model,
+                       seq_shard=args.seq_shard, kv_quant=args.kv_quant,
+                       accum=args.accum)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(row) + "\n")
+        return
+
+    # matrix driver: one subprocess per cell (fresh compile arena)
+    import subprocess
+    import sys
+    from repro import configs
+    meshes = args.meshes.split(",")
+    done = set()
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+                except Exception:
+                    pass
+    for arch, shape, _ in configs.cells():
+        for mp in meshes:
+            mesh_name = "2x16x16" if mp == "multi" else "16x16"
+            if (arch, shape, mesh_name) in done:
+                print(f"skip {arch} x {shape} x {mesh_name} (done)")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape]
+            if mp == "multi":
+                cmd.append("--multi-pod")
+            if args.out:
+                cmd += ["--out", args.out]
+            print("RUN", " ".join(cmd), flush=True)
+            rc = subprocess.run(cmd).returncode
+            if rc != 0 and args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps({
+                        "arch": arch, "shape": shape, "mesh": mesh_name,
+                        "ok": False, "rc": rc}) + "\n")
+
+
+if __name__ == "__main__":
+    try:
+        main()
+    except Exception:
+        traceback.print_exc()
+        raise

@@ -1,0 +1,97 @@
+"""Serving driver: continuous batched greedy decoding.
+
+A minimal-but-real serving loop: requests arrive with prompts, are padded
+into a fixed batch, prefilled once, then decoded step-by-step with the
+per-layer KV caches (ring buffers on windowed layers). Decode steps are a
+single jit'd function; batching amortizes the weights read (the dominant
+decode roofline term).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray          # (S,) int32
+    max_new: int = 16
+    temperature: float = 0.0    # 0 = greedy
+    top_k: int = 0
+    out: Optional[np.ndarray] = None
+
+
+class BatchServer:
+    def __init__(self, cfg: ModelConfig, params, *, max_len: int = 4096,
+                 mesh=None):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.mesh = mesh
+
+    def serve(self, requests: List[Request]) -> List[Request]:
+        cfg = self.cfg
+        b = len(requests)
+        s_max = max(len(r.prompt) for r in requests)
+        toks = np.zeros((b, s_max), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, s_max - len(r.prompt):] = r.prompt  # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.zeros((b, cfg.enc_seq, cfg.d_model),
+                                        jnp.dtype(cfg.dtype))
+
+        max_new = max(r.max_new for r in requests)
+        temperature = max(r.temperature for r in requests)
+        top_k = max(r.top_k for r in requests)
+        t0 = time.time()
+        out = model_lib.generate(
+            self.params, batch, cfg, max_new=max_new,
+            max_len=min(self.max_len, s_max + max_new),
+            temperature=temperature, top_k=top_k, mesh=self.mesh)
+        out = np.asarray(out)
+        dt = time.time() - t0
+        for i, r in enumerate(requests):
+            r.out = out[i, :r.max_new]
+        tput = b * max_new / dt
+        print(f"served {b} requests x {max_new} tokens "
+              f"in {dt:.2f}s ({tput:.1f} tok/s)")
+        return requests
+
+
+def main():
+    import argparse
+    from repro import configs
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = (configs.get_smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    server = BatchServer(cfg, params)
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab, size=args.prompt_len
+                                        ).astype(np.int32),
+                    max_new=args.max_new)
+            for _ in range(args.batch)]
+    server.serve(reqs)
+    for i, r in enumerate(reqs[:2]):
+        print(f"req {i}: {r.out[:10]}")
+
+
+if __name__ == "__main__":
+    main()

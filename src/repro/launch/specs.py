@@ -1,0 +1,317 @@
+"""Input specs (ShapeDtypeStruct stand-ins — weak-type-correct, shardable,
+zero allocation) and sharding assignments for every (arch x shape) cell,
+plus the jit-able train / prefill / decode step builders.
+
+Sharding policy (see utils/sharding.py for the param side):
+  * batch dim    -> ("pod", "data") when divisible;
+  * KV heads     -> "model" when divisible, else the cache SEQUENCE dim
+    goes to "model" (flash-decoding/split-K style sequence parallelism —
+    this is what keeps decode_32k/long_500k per-chip KV small for kv=8
+    archs on a 16-wide model axis);
+  * SSM/RG-LRU state channels -> "model" when divisible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.common import SHAPES
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.utils.sharding import MeshAxes, param_specs
+
+Array = jnp.ndarray
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+# ======================================================================
+# batch input specs
+# ======================================================================
+def batch_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    seq, gbatch, kind = SHAPES[shape_name]
+    s_text = seq - (cfg.n_patches or 0)
+    out: Dict[str, Any] = {}
+    if kind == "train":
+        out["tokens"] = jax.ShapeDtypeStruct((gbatch, s_text), I32)
+        out["labels"] = jax.ShapeDtypeStruct((gbatch, s_text), I32)
+    elif kind == "prefill":
+        out["tokens"] = jax.ShapeDtypeStruct((gbatch, s_text), I32)
+    else:  # decode
+        out["tokens"] = jax.ShapeDtypeStruct((gbatch, 1), I32)
+    if cfg.family == "encdec" and kind != "decode":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (gbatch, cfg.enc_seq, cfg.d_model), F32)
+    if cfg.n_patches and kind != "decode":
+        out["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (gbatch, cfg.n_patches, cfg.d_model), F32)
+    return out
+
+
+def _batch_axes(mesh: Mesh, dim: int) -> Optional[Tuple[str, ...]]:
+    axes = MeshAxes().present(mesh).batch
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return axes if (axes and size > 1 and dim % size == 0) else None
+
+
+def batch_shardings(specs, mesh: Mesh):
+    def one(leaf):
+        lead = _batch_axes(mesh, leaf.shape[0])
+        return NamedSharding(mesh, P(lead, *([None] * (leaf.ndim - 1))))
+    return jax.tree.map(one, specs)
+
+
+# ======================================================================
+# cache specs + shardings
+# ======================================================================
+def cache_specs(cfg: ModelConfig, shape_name: str):
+    seq, gbatch, kind = SHAPES[shape_name]
+    assert kind == "decode"
+    cache = jax.eval_shape(
+        lambda: model_lib.init_cache(cfg, gbatch, seq))
+    extras = {}
+    if cfg.family == "encdec":
+        # memory_kv from the (stubbed) encoder output
+        def mk():
+            from repro.models import encdec
+            params = encdec.init_params(jax.random.PRNGKey(0), cfg)
+            mem = jnp.zeros((gbatch, cfg.enc_seq, cfg.d_model),
+                            jnp.dtype(cfg.dtype))
+            return encdec.encode_memory_kv(params, mem, cfg)
+        extras["memory_kv"] = jax.eval_shape(mk)
+    return cache, extras
+
+
+def _model_axis(mesh: Mesh) -> Optional[str]:
+    axes = MeshAxes().present(mesh)
+    return axes.model
+
+
+def cache_shardings(cache, cfg: ModelConfig, mesh: Mesh):
+    """Path/shape-driven specs for KV caches and recurrent states."""
+    model = _model_axis(mesh)
+    msize = mesh.shape[model] if model else 1
+
+    def one(path_tuple, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "idx", "")))
+                for k in path_tuple]
+        name = keys[-1] if keys else ""
+        stacked = (keys and keys[0] in ("units",)) or \
+            (name in ("k", "v") and leaf.ndim == 5)  # stacked memory_kv
+        b_dim = 1 if stacked else 0
+        dims: list = [None] * leaf.ndim
+        if leaf.shape[b_dim] > 1:
+            dims[b_dim] = _batch_axes(mesh, leaf.shape[b_dim])
+        rest = list(range(b_dim + 1, leaf.ndim))
+        if name in ("k", "v") and len(rest) == 3:
+            # cache layout (KVH, S, hd); memory_kv layout (T, KVH, hd)
+            if leaf.shape[rest[0]] == cfg.n_kv_heads:
+                kvh_d, s_d = rest[0], rest[1]
+            else:
+                s_d, kvh_d = rest[0], rest[1]
+            if model and leaf.shape[kvh_d] % msize == 0:
+                dims[kvh_d] = model
+            elif model and leaf.shape[s_d] % msize == 0:
+                dims[s_d] = model      # split-K sequence parallelism
+        elif name in ("k_scale", "v_scale") and len(rest) == 2:
+            kvh_d, s_d = rest
+            if model and leaf.shape[kvh_d] % msize == 0:
+                dims[kvh_d] = model
+            elif model and leaf.shape[s_d] % msize == 0:
+                dims[s_d] = model
+        elif name == "state" and len(rest) == 3:
+            nh_d = rest[0]
+            if model and leaf.shape[nh_d] % msize == 0:
+                dims[nh_d] = model
+        elif name == "h" and len(rest) == 1:
+            if model and leaf.shape[rest[0]] % msize == 0:
+                dims[rest[0]] = model
+        elif name == "conv" and len(rest) == 2:
+            c_d = rest[1]
+            if model and leaf.shape[c_d] % msize == 0:
+                dims[c_d] = model
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+# ======================================================================
+# step builders
+# ======================================================================
+def serve_config(cfg: ModelConfig) -> ModelConfig:
+    """Serving runs bf16 params (no optimizer master copy)."""
+    return dataclasses.replace(cfg, param_dtype="bfloat16")
+
+
+def opt_config(cfg: ModelConfig, **over) -> adamw.AdamWConfig:
+    big = cfg.param_count() > 5e10
+    kw = dict(quantize_moments=big)
+    kw.update(over)
+    return adamw.AdamWConfig(**kw)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    mesh: Optional[Mesh] = None, accum_steps: int = 1):
+    """One optimizer step. ``accum_steps`` > 1 microbatches the global
+    batch along dim 0 with a lax.scan of grad accumulations — activation
+    working set shrinks ~accum_steps x at equal math (the knob that fits
+    the heaviest train cells; EXPERIMENTS.md §Perf)."""
+    def grads_of(params, batch):
+        def loss_fn(p):
+            return model_lib.train_loss(p, batch, cfg, mesh)
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+
+            def body(acc, mb):
+                (l, m), g = grads_of(params, mb)
+                acc = jax.tree.map(jnp.add, acc,
+                                   {"g": g, "l": l, "m": m})
+                return acc, None
+
+            zero = {"g": jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                    "l": jnp.zeros((), jnp.float32),
+                    "m": {"ce": jnp.zeros((), jnp.float32),
+                          "z_loss": jnp.zeros((), jnp.float32),
+                          "moe_aux": jnp.zeros((), jnp.float32)}}
+            acc, _ = jax.lax.scan(body, zero, micro)
+            scale = 1.0 / accum_steps
+            grads = jax.tree.map(lambda g: g * scale, acc["g"])
+            loss = acc["l"] * scale
+            metrics = jax.tree.map(lambda m: m * scale, acc["m"])
+        params, opt_state, om = adamw.update(opt_cfg, grads, opt_state,
+                                             params)
+        return params, opt_state, {**metrics, **om, "loss": loss}
+    return train_step
+
+
+def make_prefill_fn(cfg: ModelConfig, mesh: Optional[Mesh] = None):
+    def prefill_fn(params, batch):
+        logits, _, _ = model_lib.forward(params, batch, cfg, mesh=mesh)
+        return logits[:, -1]
+    return prefill_fn
+
+
+def make_decode_fn(cfg: ModelConfig, mesh: Optional[Mesh] = None):
+    def decode_fn(params, tokens, pos, cache, extras):
+        logits, cache = model_lib.decode_step(
+            params, tokens, pos, cfg, cache, extras=extras, mesh=mesh)
+        return logits, cache
+    return decode_fn
+
+
+def param_shardings(params_or_specs, mesh: Mesh):
+    specs = param_specs(params_or_specs, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def opt_state_shardings(opt_state_specs, params_specs, mesh: Mesh):
+    """m/v mirror the param specs (the int8 layout is shape-preserving, so
+    ``q`` takes the param's spec and ``scale`` the spec minus its last
+    dim); step replicates."""
+    p_sh = param_shardings(params_specs, mesh)
+
+    def build(sub):
+        if isinstance(sub, dict) and set(sub) == {"q", "scale"}:
+            q_sh = jax.tree.map(lambda l, s: s, sub["q"], p_sh)
+            s_sh = jax.tree.map(
+                lambda l, s: NamedSharding(
+                    mesh, P(*(list(s.spec[:-1]) + [None]))
+                    if len(s.spec) else P()),
+                sub["scale"], p_sh)
+            return {"q": q_sh, "scale": s_sh}
+        return jax.tree.map(lambda l, s: s, sub, p_sh)
+
+    out = {"step": NamedSharding(mesh, P())}
+    for k in ("m", "v"):
+        out[k] = build(opt_state_specs[k])
+    if "ef" in opt_state_specs:
+        out["ef"] = jax.tree.map(lambda l, s: s, opt_state_specs["ef"], p_sh)
+    return out
+
+
+# ======================================================================
+# the full cell assembly (used by dryrun and benchmarks)
+# ======================================================================
+def model_flops_for(cfg: ModelConfig, shape_name: str) -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N*D (single forward/decode token),
+    with N = active params for MoE."""
+    seq, gbatch, kind = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        return 6.0 * n_active * gbatch * seq
+    if kind == "prefill":
+        return 2.0 * n_active * gbatch * seq
+    return 2.0 * n_active * gbatch * 1  # one decode token per sequence
+
+
+@functools.lru_cache(maxsize=None)
+def _param_struct(arch: str, serve: bool):
+    cfg = configs.get_config(arch)
+    if serve:
+        cfg = serve_config(cfg)
+    return jax.eval_shape(
+        lambda k: model_lib.init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               seq_shard: bool = False, kv_quant: bool = False,
+               accum_steps: int = 1):
+    """Returns (fn, arg_structs, in_shardings, donate_argnums, meta)
+    ready for jax.jit(...).lower(*arg_structs)."""
+    cfg = configs.get_config(arch)
+    if seq_shard:
+        cfg = dataclasses.replace(cfg, seq_shard=True)
+    if kv_quant:
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    seq, gbatch, kind = SHAPES[shape_name]
+
+    if kind == "train":
+        p_struct = _param_struct(arch, serve=False)
+        ocfg = opt_config(cfg)
+        o_struct = jax.eval_shape(lambda p: adamw.init(ocfg, p), p_struct)
+        b_spec = batch_specs(cfg, shape_name)
+        fn = make_train_step(cfg, ocfg, mesh, accum_steps=accum_steps)
+        p_sh = param_shardings(p_struct, mesh)
+        in_sh = (p_sh, opt_state_shardings(o_struct, p_struct, mesh),
+                 batch_shardings(b_spec, mesh))
+        return (fn, (p_struct, o_struct, b_spec), in_sh, (0, 1),
+                {"cfg": cfg, "kind": kind})
+
+    scfg = serve_config(cfg)
+    p_struct = _param_struct(arch, serve=True)
+    p_sh = param_shardings(p_struct, mesh)
+
+    if kind == "prefill":
+        b_spec = batch_specs(scfg, shape_name)
+        fn = make_prefill_fn(scfg, mesh)
+        in_sh = (p_sh, batch_shardings(b_spec, mesh))
+        return fn, (p_struct, b_spec), in_sh, (), {"cfg": scfg, "kind": kind}
+
+    # decode
+    cache, extras = cache_specs(scfg, shape_name)
+    tok = jax.ShapeDtypeStruct((gbatch, 1), I32)
+    pos = jax.ShapeDtypeStruct((), I32)
+    fn = make_decode_fn(scfg, mesh)
+    cache_sh = cache_shardings(cache, scfg, mesh)
+    extras_sh = cache_shardings(extras, scfg, mesh)
+    tok_sh = NamedSharding(mesh, P(_batch_axes(mesh, gbatch), None))
+    in_sh = (p_sh, tok_sh, NamedSharding(mesh, P()), cache_sh, extras_sh)
+    return (fn, (p_struct, tok, pos, cache, extras), in_sh, (3,),
+            {"cfg": scfg, "kind": kind})

@@ -1,0 +1,10 @@
+"""LM substrate: config-driven model zoo (dense / MoE / SSM / hybrid /
+enc-dec / VLM backbone) in raw JAX with scan-over-layers."""
+from repro.models.config import (LayerSpec, ModelConfig, MoESpec, RecSpec,
+                                 SSMSpec)
+from repro.models.model import (decode_step, forward, greedy_generate,
+                                init_cache, init_params, prefill, train_loss)
+
+__all__ = ["LayerSpec", "ModelConfig", "MoESpec", "RecSpec", "SSMSpec",
+           "decode_step", "forward", "greedy_generate", "init_cache",
+           "init_params", "prefill", "train_loss"]

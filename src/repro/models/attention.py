@@ -1,0 +1,302 @@
+"""GQA attention with RoPE, sliding windows, logit softcap, and KV caches.
+
+Serving caches:
+  * global-attention layers keep a full (B, KVH, S_max, hd) cache;
+  * sliding-window layers keep a **ring buffer** of exactly ``window``
+    slots (slot = pos % window) — the expanded->compact index map
+    nu_ring(t) = t mod W, the temporal analogue of the paper's compact
+    scheme (DESIGN.md Section 5): O(W) memory regardless of stream length,
+    which is what makes long_500k decode feasible for windowed archs.
+
+Keys/values are RoPE-rotated *before* caching, so ring overwrites need no
+re-rotation.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models.layers import apply_rope, dense_init, rope_sincos
+
+Array = jnp.ndarray
+NEG = -1e30
+
+
+def init_attn(key, cfg: ModelConfig):
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    p = {"wq": dense_init(ks[0], (d, h, hd), cfg),
+         "wk": dense_init(ks[1], (d, kvh, hd), cfg),
+         "wv": dense_init(ks[2], (d, kvh, hd), cfg),
+         "wo": dense_init(ks[3], (h, hd, d), cfg, out=True)}
+    if cfg.qkv_bias:
+        z = jnp.zeros
+        pd = jnp.dtype(cfg.param_dtype)
+        p["bq"] = z((h, hd), pd)
+        p["bk"] = z((kvh, hd), pd)
+        p["bv"] = z((kvh, hd), pd)
+    return p
+
+
+def init_attn_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                    max_len: int):
+    """Zeroed KV cache for one attention layer (optionally int8)."""
+    size = min(spec.window, max_len) if spec.window else max_len
+    shape = (batch, cfg.n_kv_heads, size, cfg.head_dim_)
+    if cfg.kv_quant:
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:-1], jnp.float32),
+                "v_scale": jnp.zeros(shape[:-1], jnp.float32)}
+    dt = jnp.dtype(cfg.dtype)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def _kv_quantize(x: Array):
+    """(B,KVH,S,hd) -> int8 values + per-(b,h,s) absmax scales."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1),
+                        1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _kv_dequantize(q: Array, scale: Array, dtype) -> Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def _qkv(p, x: Array, cfg: ModelConfig, positions: Array):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if cfg.pos_embed == "rope":
+        sin, cos = rope_sincos(positions, cfg.head_dim_, cfg.rope_theta)
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+    return q, k, v
+
+
+def _sdpa(q: Array, k: Array, v: Array, mask: Array,
+          cfg: ModelConfig) -> Array:
+    """q: (B,Sq,H,hd); k/v: (B,Skv,KVH,hd); mask: (B|1,Sq,Skv) bool."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k,
+                   preferred_element_type=jnp.float32)
+    s = s * (1.0 / (hd ** 0.5))
+    if cfg.attn_softcap is not None:
+        c = cfg.attn_softcap
+        s = c * jnp.tanh(s / c)
+    s = jnp.where(mask[:, None, None], s, NEG)
+    p_attn = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", p_attn.astype(v.dtype), v)
+    return out.reshape(b, sq, h, hd)
+
+
+# ---------------------------------------------------------------- chunked
+#: switch to the online-softmax path above this many score elements
+_CHUNK_THRESHOLD = 4 * 1024 * 1024
+_BQ = 1024
+_BK = 1024
+
+
+def _sdpa_chunked(q: Array, k: Array, v: Array, cfg: ModelConfig, *,
+                  q0, k0, causal: bool, window: Optional[int]) -> Array:
+    """Flash-style online-softmax attention in plain XLA: lax.scan over
+    query blocks x key blocks keeps the materialised score tile at
+    (B, H, BQ, BK) instead of (B, H, S, S) — the XLA analogue of the
+    Pallas kernel in kernels/attention.py (which is the TPU deploy path;
+    this path is what the CPU dry-run lowers).
+
+    Positions: qpos = q0 + i, kpos = k0 + j. Out-of-range (padded) kv
+    masked via kpos >= k0 only within [0, Skv).
+    """
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = 1.0 / (hd ** 0.5)
+
+    pad_q = (-sq) % _BQ
+    pad_k = (-skv) % _BK
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = (sq + pad_q) // _BQ, (skv + pad_k) // _BK
+
+    qb = qp.reshape(b, nq, _BQ, kvh, g, hd).transpose(1, 0, 3, 4, 2, 5)
+    kb = kp.reshape(b, nk, _BK, kvh, hd).transpose(1, 0, 3, 2, 4)
+    vb = vp.reshape(b, nk, _BK, kvh, hd).transpose(1, 0, 3, 2, 4)
+    # qb: (nq, B, KVH, G, BQ, hd); kb/vb: (nk, B, KVH, BK, hd)
+
+    def q_block(qi, q_tile):
+        qpos = q0 + qi * _BQ + jnp.arange(_BQ, dtype=jnp.int32)
+
+        def kv_step(carry, inp):
+            m_prev, l_prev, acc = carry
+            ki, k_tile, v_tile = inp
+            j = ki * _BK + jnp.arange(_BK, dtype=jnp.int32)  # local index
+            kpos = k0 + j
+            s = jnp.einsum("bkgqd,bktd->bkgqt", q_tile, k_tile,
+                           preferred_element_type=jnp.float32) * scale
+            if cfg.attn_softcap is not None:
+                c = cfg.attn_softcap
+                s = c * jnp.tanh(s / c)
+            mask = (j[None, :] < skv)
+            mask = jnp.broadcast_to(mask, (_BQ, _BK))
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])
+            if window is not None:
+                mask = mask & (kpos[None, :] > qpos[:, None] - window)
+            s = jnp.where(mask[None, None, None], s, NEG)
+            m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m_prev - m_cur)
+            p = jnp.exp(s - m_cur[..., None])
+            l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqt,bktd->bkgqd", p, v_tile.astype(jnp.float32))
+            return (m_cur, l_cur, acc), None
+
+        init = (jnp.full((b, kvh, g, _BQ), NEG, jnp.float32),
+                jnp.zeros((b, kvh, g, _BQ), jnp.float32),
+                jnp.zeros((b, kvh, g, _BQ, hd), jnp.float32))
+        # remat the kv step: the (BQ, BK) probability tile is recomputed
+        # in backward instead of being stashed per step (bounds the scan
+        # residuals at carry size — the flash trick, XLA edition)
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), init,
+            (jnp.arange(nk, dtype=jnp.int32), kb, vb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out  # (B, KVH, G, BQ, hd)
+
+    outs = jax.lax.map(lambda args: jax.checkpoint(q_block)(*args),
+                       (jnp.arange(nq, dtype=jnp.int32), qb))
+    # (nq, B, KVH, G, BQ, hd) -> (B, nq*BQ, H, hd)
+    outs = outs.transpose(1, 0, 4, 2, 3, 5).reshape(
+        b, nq * _BQ, h, hd)
+    return outs[:, :sq].astype(q.dtype)
+
+
+def apply_attn(p, x: Array, cfg: ModelConfig, spec: LayerSpec,
+               pos_offset, cache=None, causal: bool = True
+               ) -> Tuple[Array, Optional[dict]]:
+    """Self-attention. cache=None: training/prefill-no-cache mode.
+    With cache: appends the S new positions then attends over the cache
+    (ring semantics for windowed layers). causal=False: encoder
+    (bidirectional, no cache)."""
+    b, sq, _ = x.shape
+    qpos = pos_offset + jnp.arange(sq, dtype=jnp.int32)  # (Sq,)
+    q, k_new, v_new = _qkv(p, x, cfg, qpos[None].repeat(b, 0))
+
+    if not causal:
+        mask = jnp.ones((1, sq, sq), bool)
+        out = _sdpa(q, k_new, v_new, mask, cfg)
+        dt = x.dtype
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt)), None
+
+    if cache is None:
+        if sq * sq > _CHUNK_THRESHOLD:
+            out = _sdpa_chunked(q, k_new, v_new, cfg, q0=pos_offset,
+                                k0=pos_offset, causal=True,
+                                window=spec.window)
+        else:
+            kpos = qpos
+            mask = kpos[None, None, :] <= qpos[None, :, None]
+            if spec.window is not None:
+                mask &= (kpos[None, None, :]
+                         > qpos[None, :, None] - spec.window)
+            out = _sdpa(q, k_new, v_new, mask, cfg)
+        new_cache = None
+    else:
+        size = cache["k"].shape[2]
+        k_t = k_new.swapaxes(1, 2)  # (B,KVH,S,hd)
+        v_t = v_new.swapaxes(1, 2)
+        quant = cfg.kv_quant
+        if quant:
+            k_w, ks_w = _kv_quantize(k_t)
+            v_w, vs_w = _kv_quantize(v_t)
+        else:
+            k_w, v_w = k_t, v_t
+        kc, vc = cache["k"], cache["v"]
+        ksc, vsc = cache.get("k_scale"), cache.get("v_scale")
+        if spec.window is not None and size == spec.window:
+            # ring write: slot = pos % window (vectorised scatter)
+            slots = (qpos % size).astype(jnp.int32)
+            kc = kc.at[:, :, slots, :].set(k_w)
+            vc = vc.at[:, :, slots, :].set(v_w)
+            if quant:
+                ksc = ksc.at[:, :, slots].set(ks_w)
+                vsc = vsc.at[:, :, slots].set(vs_w)
+            new_len = pos_offset + sq
+            # slot s holds position p = largest p' < new_len, p' % W == s
+            last = new_len - 1
+            slot_ids = jnp.arange(size, dtype=jnp.int32)
+            held = last - ((last - slot_ids) % size)
+            valid = (held >= 0) & (held >= new_len - size)
+            kpos_b = jnp.broadcast_to(held[None], (b, size))
+            mask = (kpos_b[:, None, :] <= qpos[None, :, None]) & \
+                   (kpos_b[:, None, :] > qpos[None, :, None] - spec.window) \
+                   & valid[None, None, :]
+        else:
+            kc = jax.lax.dynamic_update_slice(kc, k_w, (0, 0, pos_offset, 0))
+            vc = jax.lax.dynamic_update_slice(vc, v_w, (0, 0, pos_offset, 0))
+            if quant:
+                ksc = jax.lax.dynamic_update_slice(
+                    ksc, ks_w, (0, 0, pos_offset))
+                vsc = jax.lax.dynamic_update_slice(
+                    vsc, vs_w, (0, 0, pos_offset))
+            kpos = jnp.arange(size, dtype=jnp.int32)
+            mask = kpos[None, None, :] <= qpos[None, :, None]
+            if spec.window is not None:
+                mask &= kpos[None, None, :] > qpos[None, :, None] - spec.window
+        if quant:
+            k_read = _kv_dequantize(kc, ksc, x.dtype)
+            v_read = _kv_dequantize(vc, vsc, x.dtype)
+            new_cache = {"k": kc, "v": vc, "k_scale": ksc, "v_scale": vsc}
+        else:
+            k_read, v_read = kc, vc
+            new_cache = {"k": kc, "v": vc}
+        out = _sdpa(q, k_read.swapaxes(1, 2), v_read.swapaxes(1, 2), mask,
+                    cfg)
+
+    dt = x.dtype
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt)), new_cache
+
+
+# ---------------------------------------------------------- cross-attention
+def init_cross_attn(key, cfg: ModelConfig):
+    return init_attn(key, cfg)
+
+
+def apply_cross_attn(p, x: Array, memory_kv, cfg: ModelConfig) -> Array:
+    """Decoder cross-attention over precomputed encoder K/V
+    (memory_kv = {"k": (B,T,KVH,hd), "v": ...})."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+    t = memory_kv["k"].shape[1]
+    mask = jnp.ones((1, x.shape[1], t), bool)
+    out = _sdpa(q, memory_kv["k"], memory_kv["v"], mask, cfg)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+def encode_memory_kv(p, mem: Array, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder output (no RoPE)."""
+    dt = mem.dtype
+    k = jnp.einsum("bsd,dhk->bshk", mem, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", mem, p["wv"].astype(dt))
+    if "bk" in p:
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return {"k": k, "v": v}

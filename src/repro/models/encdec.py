@@ -1,0 +1,163 @@
+"""Encoder-decoder backbone (whisper-small). The conv/mel frontend is a
+STUB per the assignment: the encoder consumes precomputed frame embeddings
+(B, T_enc, d) from ``input_specs()``; everything downstream (bidirectional
+encoder stack, causal decoder with cross-attention, KV caches) is real.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.models import attention as attn_mod
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models.layers import (apply_mlp, apply_norm, embed_tokens,
+                                 init_embed, init_mlp, init_norm,
+                                 trunc_normal, unembed)
+from repro.models.transformer import cross_entropy
+from repro.utils.sharding import batch_spec, constraint
+
+Array = jnp.ndarray
+_SPEC = LayerSpec(kind="attn")
+
+
+# ----------------------------------------------------------------- params
+def _init_enc_layer(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {"pre_norm": init_norm(cfg),
+            "attn": attn_mod.init_attn(k1, cfg),
+            "mlp_norm": init_norm(cfg),
+            "mlp": init_mlp(k2, cfg)}
+
+
+def _init_dec_layer(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"pre_norm": init_norm(cfg),
+            "attn": attn_mod.init_attn(k1, cfg),
+            "cross_norm": init_norm(cfg),
+            "cross": attn_mod.init_cross_attn(k2, cfg),
+            "mlp_norm": init_norm(cfg),
+            "mlp": init_mlp(k3, cfg)}
+
+
+def init_params(key, cfg: ModelConfig):
+    ke, ku, kd, kp = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ku, cfg.n_enc_units)
+    dec_keys = jax.random.split(kd, cfg.n_units)
+    return {
+        "embed": init_embed(ke, cfg),
+        "enc_pos": {"pos_embed": trunc_normal(
+            kp, (cfg.enc_seq, cfg.d_model), 0.02,
+            jnp.dtype(cfg.param_dtype))},
+        "enc_units": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "dec_units": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "enc_norm": init_norm(cfg),
+        "final_norm": init_norm(cfg),
+        "head": {"lm_head": trunc_normal(
+            jax.random.fold_in(key, 9), (cfg.vocab_padded, cfg.d_model),
+            cfg.init_scale, jnp.dtype(cfg.param_dtype))},
+    }
+
+
+# ---------------------------------------------------------------- encoder
+def encode(params, frames: Array, cfg: ModelConfig,
+           mesh: Optional[Mesh] = None) -> Array:
+    """frames (B, T, d) stub embeddings -> encoder memory (B, T, d)."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    t = x.shape[1]
+    pos = params["enc_pos"]["pos_embed"]
+    x = x + pos[jnp.clip(jnp.arange(t), 0, pos.shape[0] - 1)].astype(
+        x.dtype)[None]
+
+    def body(carry, p_layer):
+        h = apply_norm(p_layer["pre_norm"], carry, cfg)
+        a, _ = attn_mod.apply_attn(p_layer["attn"], h, cfg, _SPEC, 0,
+                                   causal=False)
+        carry = carry + a
+        h = apply_norm(p_layer["mlp_norm"], carry, cfg)
+        carry = carry + apply_mlp(p_layer["mlp"], h, cfg)
+        if mesh is not None:
+            carry = constraint(carry, mesh, batch_spec(mesh, extra_dims=2))
+        return carry, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_units"])
+    return apply_norm(params["enc_norm"], x, cfg)
+
+
+def encode_memory_kv(params, memory: Array, cfg: ModelConfig):
+    """Per-decoder-unit cross K/V, stacked for the scan (decode cache)."""
+    def one(p_layer):
+        return attn_mod.encode_memory_kv(p_layer["cross"], memory, cfg)
+    return jax.lax.map(one, params["dec_units"])
+
+
+# ---------------------------------------------------------------- decoder
+def _dec_layer(p_layer, x, memory_kv, cfg, pos_offset, cache, mesh):
+    h = apply_norm(p_layer["pre_norm"], x, cfg)
+    a, new_cache = attn_mod.apply_attn(p_layer["attn"], h, cfg, _SPEC,
+                                       pos_offset, cache)
+    x = x + a
+    h = apply_norm(p_layer["cross_norm"], x, cfg)
+    x = x + attn_mod.apply_cross_attn(p_layer["cross"], h, memory_kv, cfg)
+    h = apply_norm(p_layer["mlp_norm"], x, cfg)
+    x = x + apply_mlp(p_layer["mlp"], h, cfg)
+    if mesh is not None:
+        x = constraint(x, mesh, batch_spec(mesh, extra_dims=2))
+    return x, new_cache
+
+
+def forward(params, frames: Array, tokens: Array, cfg: ModelConfig, *,
+            pos_offset=0, cache=None, memory_kv=None,
+            mesh: Optional[Mesh] = None):
+    """Full enc-dec forward. For decode pass ``cache`` + ``memory_kv``
+    (from encode_memory_kv) and frames=None.
+
+    Returns (logits, new_cache, aux=0)."""
+    if memory_kv is None:
+        memory = encode(params, frames, cfg, mesh)
+        memory_kv = encode_memory_kv(params, memory, cfg)
+
+    x = embed_tokens(params["embed"], tokens, cfg, pos_offset=pos_offset)
+    has_cache = cache is not None
+    pos_offset = jnp.asarray(pos_offset, jnp.int32)
+
+    def body(carry, xs):
+        if has_cache:
+            p_layer, mem_kv, c = xs
+        else:
+            p_layer, mem_kv = xs
+            c = None
+        new_x, new_c = _dec_layer(p_layer, carry, mem_kv, cfg, pos_offset,
+                                  c, mesh)
+        return new_x, new_c
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    xs = ((params["dec_units"], memory_kv, cache["units"]) if has_cache
+          else (params["dec_units"], memory_kv))
+    x, new_unit_cache = jax.lax.scan(body, x, xs)
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = unembed(params["embed"], params.get("head"), x, cfg, mesh)
+    new_cache = {"units": new_unit_cache} if has_cache else None
+    return logits, new_cache, jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    proto = attn_mod.init_attn_cache(cfg, _SPEC, batch, max_len)
+    return {"units": jax.tree.map(
+        lambda a: jnp.zeros((cfg.n_units,) + a.shape, a.dtype), proto)}
+
+
+def train_loss(params, batch, cfg: ModelConfig,
+               mesh: Optional[Mesh] = None):
+    logits, _, aux = forward(params, batch["frames"], batch["tokens"], cfg,
+                             mesh=mesh)
+    ce = cross_entropy(logits, batch["labels"])
+    z = jax.nn.logsumexp(logits, axis=-1)
+    total = ce + 1e-4 * jnp.mean(jnp.square(z))
+    return total, {"ce": ce, "moe_aux": aux}

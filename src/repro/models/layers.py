@@ -1,0 +1,143 @@
+"""Shared neural layers (raw JAX, param trees of jnp arrays): norms, RoPE,
+embeddings, dense/gated MLPs. Initialisation is truncated-normal
+(scale/sqrt(fan_in) for output projections, standard for the rest)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+Array = jnp.ndarray
+
+
+def trunc_normal(key, shape, scale, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def dense_init(key, shape, cfg: ModelConfig, *, out: bool = False):
+    import math
+    fan_in = shape[0] if not out else max(1, math.prod(shape[:-1]))
+    scale = cfg.init_scale if not out else cfg.init_scale / (fan_in ** 0.5)
+    return trunc_normal(key, shape, scale, jnp.dtype(cfg.param_dtype))
+
+
+# ------------------------------------------------------------------- norms
+def init_norm(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.zeros((d,), jnp.dtype(cfg.param_dtype))}
+    if cfg.norm == "ln":
+        p["bias"] = jnp.zeros((d,), jnp.dtype(cfg.param_dtype))
+    return p
+
+
+def apply_norm(p, x: Array, cfg: ModelConfig, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "ln":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        out = out * (1.0 + p["scale"].astype(jnp.float32)) \
+            + p["bias"].astype(jnp.float32)
+    else:  # rms, (1+scale) parameterisation (gemma/llama-compatible)
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps)
+        out = out * (1.0 + p["scale"].astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_sincos(positions: Array, head_dim: int, theta: float):
+    """positions (…, S) int32 -> (sin, cos) each (…, S, head_dim//2) f32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: Array, sin: Array, cos: Array) -> Array:
+    """x: (B, S, H, D); sin/cos: (B, S, D//2) or (S, D//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if sin.ndim == 2:
+        sin = sin[None]
+        cos = cos[None]
+    sin = sin[:, :, None, :]
+    cos = cos[:, :, None, :]
+    xf1 = x1.astype(jnp.float32)
+    xf2 = x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin],
+        axis=-1).astype(x.dtype)
+
+
+# -------------------------------------------------------------- embeddings
+def init_embed(key, cfg: ModelConfig):
+    p = {"tok_embed": trunc_normal(key, (cfg.vocab_padded, cfg.d_model),
+                                   cfg.init_scale,
+                                   jnp.dtype(cfg.param_dtype))}
+    if cfg.pos_embed == "learned":
+        p["pos_embed"] = trunc_normal(
+            jax.random.fold_in(key, 1),
+            (min(cfg.max_seq, 65536), cfg.d_model),
+            0.02, jnp.dtype(cfg.param_dtype))
+    return p
+
+
+def embed_tokens(p, tokens: Array, cfg: ModelConfig,
+                 pos_offset: Array | int = 0) -> Array:
+    x = jnp.take(p["tok_embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.emb_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if cfg.pos_embed == "learned":
+        s = tokens.shape[-1]
+        pos = pos_offset + jnp.arange(s)
+        pos = jnp.clip(pos, 0, p["pos_embed"].shape[0] - 1)
+        x = x + jnp.take(p["pos_embed"], pos, axis=0).astype(x.dtype)
+    return x
+
+
+def unembed(p_embed, p_head, x: Array, cfg: ModelConfig, mesh=None) -> Array:
+    table = p_embed["tok_embed"] if cfg.tie_embeddings else p_head["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                        table.astype(jnp.float32))
+    if mesh is not None:
+        # pin vocab-sharded logits (prevents an (B,S,V) all-gather)
+        from repro.utils.sharding import MeshAxes, constraint
+        axes = MeshAxes().present(mesh)
+        if axes.model and cfg.vocab_padded % mesh.shape[axes.model] == 0:
+            from jax.sharding import PartitionSpec as P
+            lead = axes.batch if axes.batch else None
+            logits = constraint(logits, mesh, P(lead, None, axes.model))
+    if cfg.logit_softcap is not None:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+# --------------------------------------------------------------------- MLP
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], (d, f), cfg),
+         "w_down": dense_init(ks[1], (f, d), cfg, out=True)}
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(ks[2], (d, f), cfg)
+    return p
+
+
+def apply_mlp(p, x: Array, cfg: ModelConfig) -> Array:
+    dt = x.dtype
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+    if cfg.mlp_kind == "swiglu":
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+        h = jax.nn.silu(gate) * up
+    elif cfg.mlp_kind == "geglu":
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+        h = jax.nn.gelu(gate, approximate=True) * up
+    else:
+        h = jax.nn.gelu(up, approximate=True)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt))

@@ -1,0 +1,123 @@
+"""Family dispatch: one public API over decoder-only and enc-dec models.
+
+  init_params(key, cfg)                  -> param tree
+  train_loss(params, batch, cfg, mesh)   -> (loss, metrics)
+  train_step is assembled in launch/train.py (optimizer in the loop)
+  prefill / decode_step                  -> serving
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.models import encdec, transformer
+from repro.models.config import ModelConfig
+
+Array = jnp.ndarray
+
+
+def init_params(key, cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return encdec.init_params(key, cfg)
+    return transformer.init_params(key, cfg)
+
+
+def train_loss(params, batch, cfg: ModelConfig,
+               mesh: Optional[Mesh] = None):
+    if cfg.family == "encdec":
+        return encdec.train_loss(params, batch, cfg, mesh)
+    return transformer.train_loss(params, batch, cfg, mesh)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.family == "encdec":
+        return encdec.init_cache(cfg, batch, max_len)
+    return transformer.init_cache(cfg, batch, max_len)
+
+
+def forward(params, batch, cfg: ModelConfig, *, mesh=None):
+    """Training/prefill-style forward for any family."""
+    if cfg.family == "encdec":
+        return encdec.forward(params, batch["frames"], batch["tokens"], cfg,
+                              mesh=mesh)
+    return transformer.forward(params, batch["tokens"], cfg,
+                               prefix_embeds=batch.get("prefix_embeds"),
+                               mesh=mesh)
+
+
+def prefill(params, batch, cfg: ModelConfig, cache, *, mesh=None):
+    """Fill the KV cache from a prompt; returns (last_logits, cache, extras).
+
+    For enc-dec, also returns the per-unit cross K/V under extras."""
+    if cfg.family == "encdec":
+        memory = encdec.encode(params, batch["frames"], cfg, mesh)
+        memory_kv = encdec.encode_memory_kv(params, memory, cfg)
+        logits, cache, _ = encdec.forward(
+            params, None, batch["tokens"], cfg, pos_offset=0, cache=cache,
+            memory_kv=memory_kv, mesh=mesh)
+        return logits[:, -1], cache, {"memory_kv": memory_kv}
+    logits, cache, _ = transformer.forward(
+        params, batch["tokens"], cfg, pos_offset=0, cache=cache,
+        prefix_embeds=batch.get("prefix_embeds"), mesh=mesh)
+    return logits[:, -1], cache, {}
+
+
+def decode_step(params, tokens: Array, pos_offset, cfg: ModelConfig,
+                cache, *, extras=None, mesh=None):
+    """One decode step: tokens (B, 1) at absolute position ``pos_offset``.
+    Returns (logits (B, V), new_cache)."""
+    if cfg.family == "encdec":
+        logits, cache, _ = encdec.forward(
+            params, None, tokens, cfg, pos_offset=pos_offset, cache=cache,
+            memory_kv=(extras or {})["memory_kv"], mesh=mesh)
+        return logits[:, -1], cache
+    logits, cache, _ = transformer.forward(
+        params, tokens, cfg, pos_offset=pos_offset, cache=cache, mesh=mesh)
+    return logits[:, -1], cache
+
+
+def _select_token(logits: Array, key, temperature: float, top_k: int
+                  ) -> Array:
+    """Greedy (temperature<=0) or top-k temperature sampling."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        cutoff = vals[..., -1:]
+        logits = jnp.where(logits < cutoff, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def generate(params, batch, cfg: ModelConfig, *, max_new: int,
+             max_len: int, temperature: float = 0.0, top_k: int = 0,
+             seed: int = 0, mesh=None):
+    """KV-cached decoding loop: greedy by default, top-k temperature
+    sampling when temperature > 0."""
+    b = batch["tokens"].shape[0]
+    cache = init_cache(cfg, b, max_len)
+    last, cache, extras = prefill(params, batch, cfg, cache, mesh=mesh)
+    start = batch["tokens"].shape[1]
+    key0 = jax.random.PRNGKey(seed)
+
+    def body(carry, i):
+        last_logits, cache_c = carry
+        k = jax.random.fold_in(key0, i)
+        tok = _select_token(last_logits, k, temperature, top_k)[:, None]
+        logits, cache_c = decode_step(params, tok, start + i, cfg, cache_c,
+                                      extras=extras, mesh=mesh)
+        return (logits, cache_c), tok[:, 0]
+
+    (_, _), toks = jax.lax.scan(body, (last, cache),
+                                jnp.arange(max_new, dtype=jnp.int32))
+    return toks.T  # (B, max_new)
+
+
+def greedy_generate(params, batch, cfg: ModelConfig, *, max_new: int,
+                    max_len: int, mesh=None):
+    """Greedy decoding loop (serving example path)."""
+    return generate(params, batch, cfg, max_new=max_new, max_len=max_len,
+                    temperature=0.0, mesh=mesh)

@@ -1,0 +1,109 @@
+"""Griffin recurrent block with the RG-LRU cell [arXiv:2402.19427]
+(RecurrentGemma's mixer).
+
+Block: y = W_out( GeLU(W_gate x)  ⊙  RGLRU( Conv1D_4( W_x x ) ) ).
+RG-LRU: r_t, i_t gates from the branch input; a_t = exp(-c softplus(L) r_t);
+h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t u_t). Training uses an associative
+scan (parallel over S); decode carries (h, conv window) — O(1)/token.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+from repro.models.ssm import _causal_conv
+
+Array = jnp.ndarray
+C_RGLRU = 8.0
+
+
+def _d_rec(cfg: ModelConfig) -> int:
+    return cfg.rec.d_rec or cfg.d_model
+
+
+def init_rec(key, cfg: ModelConfig):
+    d, dr = cfg.d_model, _d_rec(cfg)
+    k = cfg.rec.conv_width
+    ks = jax.random.split(key, 6)
+    pd = jnp.dtype(cfg.param_dtype)
+    return {
+        "w_x": dense_init(ks[0], (d, dr), cfg),
+        "w_gate": dense_init(ks[1], (d, dr), cfg),
+        "conv_w": dense_init(ks[2], (k, dr), cfg),
+        "conv_b": jnp.zeros((dr,), pd),
+        "w_rg": dense_init(ks[3], (dr, dr), cfg),
+        "b_rg": jnp.zeros((dr,), pd),
+        "w_ig": dense_init(ks[4], (dr, dr), cfg),
+        "b_ig": jnp.zeros((dr,), pd),
+        # softplus(lambda) ~ 0.105 -> a_max ~ exp(-0.84) at r=1
+        "lambda_p": jnp.full((dr,), -2.2, pd),
+        "w_out": dense_init(ks[5], (dr, d), cfg, out=True),
+    }
+
+
+def init_rec_cache(cfg: ModelConfig, batch: int):
+    dr = _d_rec(cfg)
+    return {
+        "h": jnp.zeros((batch, dr), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.rec.conv_width - 1, dr),
+                          jnp.dtype(cfg.dtype)),
+    }
+
+
+def _rglru(p, u: Array, h0: Optional[Array]
+           ) -> Tuple[Array, Array]:
+    """u (B,S,dr) post-conv branch input; h0 (B,dr) or None.
+    Returns (h (B,S,dr) fp32, h_last)."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", uf,
+                                  p["w_rg"].astype(jnp.float32))
+                       + p["b_rg"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", uf,
+                                  p["w_ig"].astype(jnp.float32))
+                       + p["b_ig"].astype(jnp.float32))
+    log_a = -C_RGLRU * r * jax.nn.softplus(p["lambda_p"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def apply_rec(p, x: Array, cfg: ModelConfig, cache=None
+              ) -> Tuple[Array, Optional[dict]]:
+    """x (B,S,d) -> (out, new_cache)."""
+    dt_ = x.dtype
+    u = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(dt_))
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x,
+                                  p["w_gate"].astype(dt_)),
+                       approximate=True)
+
+    if cache is None:
+        u = _causal_conv(u, p["conv_w"], p["conv_b"])
+        h, _ = _rglru(p, u, None)
+        new_cache = None
+    else:
+        k = cfg.rec.conv_width
+        s = x.shape[1]
+        window = jnp.concatenate([cache["conv"], u], axis=1)
+        out = jnp.zeros_like(u)
+        for j in range(k):
+            out = out + window[:, j:j + s] * \
+                p["conv_w"][j][None, None].astype(dt_)
+        u = out + p["conv_b"][None, None].astype(dt_)
+        h, h_last = _rglru(p, u, cache["h"])
+        new_cache = {"h": h_last, "conv": window[:, -(k - 1):]}
+
+    y = h.astype(dt_) * gate
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(dt_)), new_cache

@@ -1,0 +1,198 @@
+"""Mamba-2 SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Training runs the chunked SSD algorithm (intra-chunk quadratic block +
+inter-chunk linear state recurrence); decoding carries the (B, H, P, N)
+state and the depthwise-conv window — O(1) per token, which is what makes
+``long_500k`` decode trivial for the SSM arch.
+
+The pure-jnp chunked scan below is the dry-run/CPU path; the TPU deploy
+path for the intra-chunk block is the Pallas kernel
+``kernels/ssd_chunk.py`` (validated against this implementation AND the
+sequential per-token recurrence in tests/test_kernels_ssd.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+Array = jnp.ndarray
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return d_in, nh, conv_dim
+
+
+def init_ssm(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, nh, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    pd = jnp.dtype(cfg.param_dtype)
+    d_proj = 2 * d_in + 2 * s.n_groups * s.d_state + nh
+    return {
+        "in_proj": dense_init(ks[0], (d, d_proj), cfg),
+        "conv_w": dense_init(ks[1], (s.conv_width, conv_dim), cfg),
+        "conv_b": jnp.zeros((conv_dim,), pd),
+        "A_log": jnp.zeros((nh,), pd),           # A = -exp(0) = -1 at init
+        "D": jnp.ones((nh,), pd),
+        "dt_bias": jnp.zeros((nh,), pd),
+        "norm_scale": jnp.zeros((d_in,), pd),
+        "out_proj": dense_init(ks[2], (d_in, d), cfg, out=True),
+    }
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    d_in, nh, conv_dim = _dims(cfg)
+    return {
+        "state": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim),
+                          jnp.dtype(cfg.dtype)),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv; x (B,S,C), w (K,C)."""
+    k = w.shape[0]
+    out = jnp.zeros_like(x)
+    for j in range(k):
+        shift = k - 1 - j
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xs * w[j][None, None, :].astype(x.dtype)
+    return out + b[None, None, :].astype(x.dtype)
+
+
+def _ssd_chunked(xh: Array, dt: Array, a: Array, bm: Array, cm: Array,
+                 chunk: int) -> Array:
+    """Chunked SSD scan. xh (B,S,H,P); dt (B,S,H); a (H,) negative;
+    bm/cm (B,S,G,N). Returns (B,S,H,P), fp32."""
+    b, s, h, p = xh.shape
+    g = bm.shape[2]
+    hpg = h // g
+    pad = (-s) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nc, ll = sp // chunk, chunk
+
+    xc = xh.reshape(b, nc, ll, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, ll, h).astype(jnp.float32)
+    bc = bm.reshape(b, nc, ll, g, 1, -1).astype(jnp.float32)
+    cc = cm.reshape(b, nc, ll, g, 1, -1).astype(jnp.float32)
+    bh = jnp.broadcast_to(bc, (b, nc, ll, g, hpg, bc.shape[-1])
+                          ).reshape(b, nc, ll, h, -1)
+    ch = jnp.broadcast_to(cc, (b, nc, ll, g, hpg, cc.shape[-1])
+                          ).reshape(b, nc, ll, h, -1)
+
+    da = dtc * a[None, None, None, :]              # (b,nc,L,h)
+    da_t = jnp.cumsum(da, axis=2).transpose(0, 1, 3, 2)  # (b,nc,h,L)
+    dt_t = dtc.transpose(0, 1, 3, 2)               # (b,nc,h,L)
+
+    # intra-chunk (the "duality" quadratic block)
+    cb = jnp.einsum("bclhn,bcmhn->bchlm", ch, bh)
+    seg = da_t[..., :, None] - da_t[..., None, :]   # (b,nc,h,L,L)
+    tri = jnp.tril(jnp.ones((ll, ll), bool))
+    decay = jnp.where(tri[None, None, None], jnp.exp(seg), 0.0)
+    scores = cb * decay * dt_t[..., None, :]
+    y_diag = jnp.einsum("bchlm,bcmhp->bclhp", scores, xc)
+
+    # chunk-final states
+    w = jnp.exp(da_t[..., -1:] - da_t) * dt_t       # (b,nc,h,L)
+    states = jnp.einsum("bchm,bcmhp,bcmhn->bchpn", w, xc, bh)
+
+    # inter-chunk recurrence (sequential scan over chunks)
+    chunk_decay = jnp.exp(da_t[..., -1])            # (b,nc,h)
+    def scan_fn(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry                           # emit state BEFORE chunk
+    _, prev = jax.lax.scan(
+        scan_fn, jnp.zeros((b, h, p, bh.shape[-1]), jnp.float32),
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev = prev.transpose(1, 0, 2, 3, 4)            # (b,nc,h,p,n)
+
+    y_off = jnp.einsum("bclhn,bchpn->bclhp", ch, prev) \
+        * jnp.exp(da_t).transpose(0, 1, 3, 2)[..., None]
+    y = (y_diag + y_off).reshape(b, sp, h, p)
+    return y[:, :s]
+
+
+def apply_ssm(p, x: Array, cfg: ModelConfig, cache=None
+              ) -> Tuple[Array, Optional[dict]]:
+    """x (B,S,d) -> (out (B,S,d), new_cache)."""
+    s_cfg = cfg.ssm
+    b, s, _ = x.shape
+    d_in, nh, conv_dim = _dims(cfg)
+    g, n = s_cfg.n_groups, s_cfg.d_state
+    hd = s_cfg.head_dim
+    dt_ = x.dtype
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"].astype(dt_))
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + conv_dim]
+    dt_raw = zxbcdt[..., d_in + conv_dim:]
+
+    if cache is None:
+        xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+        new_conv = None
+    else:
+        window = jnp.concatenate([cache["conv"], xbc], axis=1)  # (b,w-1+s,c)
+        k = s_cfg.conv_width
+        out = jnp.zeros_like(xbc)
+        for j in range(k):
+            out = out + window[:, j:j + s] * \
+                p["conv_w"][j][None, None].astype(dt_)
+        xbc = out + p["conv_b"][None, None].astype(dt_)
+        new_conv = window[:, -(k - 1):]
+    xbc = jax.nn.silu(xbc)
+
+    xs = xbc[..., :d_in].reshape(b, s, nh, hd)
+    bm = xbc[..., d_in:d_in + g * n].reshape(b, s, g, n)
+    cm = xbc[..., d_in + g * n:].reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if cache is None:
+        y = _ssd_chunked(xs, dt, a, bm, cm, s_cfg.chunk)
+        new_state = None
+    else:
+        # recurrent decode: state (b,h,p,n)
+        hpg = nh // g
+        bh = jnp.repeat(bm, hpg, axis=2).astype(jnp.float32)  # (b,s,h,n)
+        chh = jnp.repeat(cm, hpg, axis=2).astype(jnp.float32)
+        state = cache["state"]
+        ys = []
+        for i in range(s):  # s == 1 in decode
+            da = jnp.exp(dt[:, i] * a[None])                  # (b,h)
+            upd = jnp.einsum("bh,bhp,bhn->bhpn", dt[:, i],
+                             xs[:, i].astype(jnp.float32), bh[:, i])
+            state = state * da[..., None, None] + upd
+            ys.append(jnp.einsum("bhpn,bhn->bhp", state, chh[:, i]))
+        y = jnp.stack(ys, axis=1)
+        new_state = state
+
+    y = y + xs.astype(jnp.float32) * p["D"].astype(jnp.float32)[
+        None, None, :, None]
+    y = y.reshape(b, s, d_in)
+    # gated RMSNorm (mamba2)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(ms + 1e-6) * (
+        1.0 + p["norm_scale"].astype(jnp.float32))
+    out = jnp.einsum("bsk,kd->bsd", y.astype(dt_), p["out_proj"].astype(dt_))
+    new_cache = None if cache is None else {"state": new_state,
+                                            "conv": new_conv}
+    return out, new_cache

@@ -1,0 +1,177 @@
+"""AdamW (raw JAX) with the distributed-optimization extras the big MoE
+configs need:
+
+  * optional **int8 moment quantization** (per-last-axis-block scales,
+    error-free round-trip storage format) — halves-to-quarters the
+    dominant optimizer-state HBM term for 100B+ models;
+  * optional **int8 gradient compression with error feedback** (1-bit-
+    Adam-style residual accumulation) for cross-pod all-reduce: the
+    quantization residual is carried in optimizer state, so the scheme is
+    unbiased over time;
+  * global-norm clipping, decoupled weight decay, cosine schedule with
+    linear warmup.
+
+State is a pytree of plain arrays — checkpointable with the generic
+manager, reshardable on restore.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    quantize_moments: bool = False   # int8 m/v
+    compress_grads: bool = False     # int8 error-feedback grads
+
+
+# ------------------------------------------------------ int8 block quant
+# Shape-preserving layout: q keeps the parameter's shape (int8, last axis
+# padded to the block size), scales are (..., last/BLOCK). This means the
+# quantized state SHARDS with the same PartitionSpec as the parameter —
+# critical at 100B+ scale (a flat layout would replicate; see
+# launch/specs.opt_state_shardings).
+_QBLOCK = 128
+
+
+def _quantize(x: Array) -> Tuple[Array, Array]:
+    if x.ndim == 0:
+        x = x.reshape(1)
+    last = x.shape[-1]
+    pad = (-last) % _QBLOCK
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    blocks = xp.reshape(*xp.shape[:-1], -1, _QBLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return (q.reshape(*xp.shape[:-1], last + pad),
+            scale[..., 0].astype(jnp.float32))
+
+
+def _dequantize(q: Array, scale: Array, shape, size) -> Array:
+    del size
+    last = shape[-1] if len(shape) else 1
+    blocks = q.reshape(*q.shape[:-1], -1, _QBLOCK).astype(jnp.float32)
+    out = blocks * scale[..., None]
+    out = out.reshape(*q.shape[:-1], q.shape[-1])[..., :last]
+    return out.reshape(shape)
+
+
+def _q_tree(tree):
+    qs = jax.tree.map(lambda x: _quantize(x)[0], tree)
+    ss = jax.tree.map(lambda x: _quantize(x)[1], tree)
+    return {"q": qs, "scale": ss}
+
+
+def _dq_tree(qtree, like):
+    return jax.tree.map(
+        lambda q, s, ref: _dequantize(q, s, ref.shape, ref.size),
+        qtree["q"], qtree["scale"], like)
+
+
+# -------------------------------------------------------------- schedule
+def lr_schedule(cfg: AdamWConfig, step: Array) -> Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+# ------------------------------------------------------------- optimizer
+def init(cfg: AdamWConfig, params):
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    state = {"step": jnp.zeros((), jnp.int32)}
+    if cfg.quantize_moments:
+        state["m"] = _q_tree(zeros)
+        state["v"] = _q_tree(zeros)
+    else:
+        state["m"] = zeros
+        state["v"] = zeros
+    if cfg.compress_grads:
+        state["ef"] = jax.tree.map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return state
+
+
+def compress_decompress(g: Array, residual: Array
+                        ) -> Tuple[Array, Array]:
+    """Error-feedback int8 round-trip: returns (g_hat, new_residual).
+    In deployment the int8 payload is what crosses the pod interconnect."""
+    corrected = g + residual
+    q, s = _quantize(corrected)
+    g_hat = _dequantize(q, s, g.shape, g.size)
+    return g_hat, corrected - g_hat
+
+
+def update(cfg: AdamWConfig, grads, state, params):
+    """-> (new_params, new_state, metrics)."""
+    step = state["step"]
+    metrics = {}
+
+    if cfg.compress_grads:
+        pairs = jax.tree.map(compress_decompress, grads, state["ef"])
+        grads = jax.tree.map(lambda p: p[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_ef = jax.tree.map(lambda p: p[1], pairs,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    else:
+        new_ef = None
+
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    metrics["grad_norm"] = gnorm
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    m_prev = (_dq_tree(state["m"], params) if cfg.quantize_moments
+              else state["m"])
+    v_prev = (_dq_tree(state["v"], params) if cfg.quantize_moments
+              else state["v"])
+
+    m = jax.tree.map(lambda mm, g: cfg.b1 * mm
+                     + (1 - cfg.b1) * g.astype(jnp.float32), m_prev, grads)
+    v = jax.tree.map(lambda vv, g: cfg.b2 * vv
+                     + (1 - cfg.b2) * jnp.square(g.astype(jnp.float32)),
+                     v_prev, grads)
+
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+    lr = lr_schedule(cfg, step)
+    metrics["lr"] = lr
+
+    def upd(p, mm, vv):
+        mhat = mm / bc1
+        vhat = vv / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+        return (p.astype(jnp.float32) - lr * (delta + wd *
+                p.astype(jnp.float32))).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    new_state = {"step": step + 1,
+                 "m": _q_tree(m) if cfg.quantize_moments else m,
+                 "v": _q_tree(v) if cfg.quantize_moments else v}
+    if new_ef is not None:
+        new_state["ef"] = new_ef
+    return new_params, new_state, metrics

@@ -1,0 +1,162 @@
+"""Sharding rules: map parameter-tree paths and activation roles onto
+PartitionSpecs for the production mesh.
+
+Philosophy (MaxText-style, divisibility-safe):
+  * batch shards over ("pod", "data") — DP across pods, DP/FSDP within;
+  * "model" is the tensor-parallel axis: attention heads, ffn hidden,
+    vocab, experts;
+  * parameters additionally FSDP-shard their d_model-sized axis over
+    "data" (ZeRO-3); the per-layer all-gather is emitted by XLA inside the
+    scan body;
+  * every rule degrades to replication when the dimension does not divide
+    the axis size (e.g. 12 heads on a 16-wide model axis) — a wrong-but-
+    compiling spec is worse than a replicated one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    """Logical roles of the mesh axes (None = role absent in this mesh)."""
+    batch: Tuple[str, ...] = ("pod", "data")
+    fsdp: Optional[str] = "data"
+    model: Optional[str] = "model"
+
+    def present(self, mesh: Mesh) -> "MeshAxes":
+        names = set(mesh.axis_names)
+        return MeshAxes(
+            batch=tuple(a for a in self.batch if a in names),
+            fsdp=self.fsdp if self.fsdp in names else None,
+            model=self.model if self.model in names else None,
+        )
+
+
+def axis_size(mesh: Mesh, axis: Optional[str]) -> int:
+    if axis is None or axis not in mesh.axis_names:
+        return 1
+    return mesh.shape[axis]
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    """Can `dim` be sharded over `axis` (str or tuple) on this mesh?"""
+    if axis is None:
+        return False
+    if isinstance(axis, str):
+        size = axis_size(mesh, axis)
+    else:
+        size = 1
+        for a in axis:
+            size *= axis_size(mesh, a)
+    return size > 1 and dim % size == 0
+
+
+# --------------------------------------------------------------- param rules
+#: (path-regex, per-dim axis roles). Roles: "model", "fsdp", None.
+#: First match wins; checked against "/".join(path keys).
+_PARAM_RULES = (
+    # embeddings / unembedding: vocab model-sharded, d_model fsdp-sharded
+    (r"(tok_embed|pos_embed|lm_head)$", ("model", "fsdp")),
+    # attention projections (leading unit-stack dim handled separately):
+    # wq/wkv: (d_model, heads, head_dim); wo: (heads, head_dim, d_model)
+    (r"attn/wq$", ("fsdp", "model", None)),
+    (r"attn/w[kv]$", ("fsdp", "model", None)),
+    (r"attn/wo$", ("model", None, "fsdp")),
+    (r"attn/b[qkv]$", (None, None)),
+    # MoE experts: (E, d_model, d_ff) — EP over model if E divides, else
+    # fall through to ffn TP on the hidden dim
+    (r"moe/(w_gate|w_up)$", ("model_or_none", "fsdp", "model_if_free")),
+    (r"moe/w_down$", ("model_or_none", "model_if_free", "fsdp")),
+    (r"moe/router$", ("fsdp", None)),
+    # arctic-style dense residual MLP nested under moe/dense/
+    (r"dense/(w_gate|w_up)$", ("fsdp", "model")),
+    (r"dense/w_down$", ("model", "fsdp")),
+    # dense ffn: hidden dim model-sharded
+    (r"mlp/(w_gate|w_up)$", ("fsdp", "model")),
+    (r"mlp/w_down$", ("model", "fsdp")),
+    # recurrent (RG-LRU) and SSM: inner dim model-sharded
+    (r"(rec|ssm)/(w_x|w_gate|in_proj)$", ("fsdp", "model")),
+    (r"(rec|ssm)/(out_proj|w_out)$", ("model", "fsdp")),
+    (r"(rec|ssm)/", (None,)),  # small per-channel params: replicate
+    # norms, biases, scalars: replicated
+    (r"", (None,)),
+)
+
+
+def spec_for_param(path: str, shape: Tuple[int, ...], mesh: Mesh,
+                   axes: MeshAxes, stacked: bool = False) -> P:
+    """PartitionSpec for one parameter. ``stacked`` strips the leading
+    layer-stack dim (it is never sharded)."""
+    dims = list(shape[1:] if stacked else shape)
+    for pattern, roles in _PARAM_RULES:
+        if re.search(pattern, path):
+            spec = []
+            model_used = False
+            roles = list(roles) + [None] * (len(dims) - len(roles))
+            for dim, role in zip(dims, roles):
+                if role == "model" and _fits(dim, mesh, axes.model):
+                    spec.append(axes.model)
+                    model_used = True
+                elif role == "model_or_none" and _fits(dim, mesh, axes.model):
+                    spec.append(axes.model)
+                    model_used = True
+                elif role == "fsdp" and _fits(dim, mesh, axes.fsdp):
+                    spec.append(axes.fsdp)
+                elif role == "model_if_free" and not model_used \
+                        and _fits(dim, mesh, axes.model):
+                    spec.append(axes.model)
+                    model_used = True
+                else:
+                    spec.append(None)
+            if stacked:
+                spec = [None] + spec
+            return P(*spec)
+    return P()
+
+
+def param_specs(params, mesh: Mesh, axes: Optional[MeshAxes] = None,
+                stacked_prefixes: Tuple[str, ...] = ("units", "tail",
+                                                     "enc_units",
+                                                     "dec_units")):
+    """Build a PartitionSpec tree matching a parameter tree.
+
+    Leaves under any ``stacked_prefixes`` subtree are treated as stacked
+    (leading scan dim unsharded).
+    """
+    axes = (axes or MeshAxes()).present(mesh)
+
+    def one(path_tuple, leaf):
+        keys = [getattr(k, "key", getattr(k, "idx", None))
+                for k in path_tuple]
+        path = "/".join(str(k) for k in keys)
+        stacked = any(str(keys[0]) == p for p in stacked_prefixes) \
+            if keys else False
+        return spec_for_param(path, leaf.shape, mesh, axes, stacked=stacked)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------- activation specs
+def batch_spec(mesh: Mesh, axes: Optional[MeshAxes] = None, *,
+               extra_dims: int = 1) -> P:
+    """P(batch_axes, None * extra_dims) for (B, S, ...) activations."""
+    axes = (axes or MeshAxes()).present(mesh)
+    lead = axes.batch if axes.batch else None
+    return P(lead, *([None] * extra_dims))
+
+
+def constraint(x, mesh: Optional[Mesh], spec: P):
+    """with_sharding_constraint that degrades to identity without a mesh."""
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)

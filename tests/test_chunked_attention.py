@@ -1,0 +1,90 @@
+"""The XLA online-softmax (chunked) attention path must match the direct
+softmax path exactly (same math, different schedule) across masks."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+from repro.models.config import LayerSpec, ModelConfig
+
+
+def _cfg(**over):
+    base = dict(name="t", d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                d_ff=128, vocab=128, unit=(LayerSpec(kind="attn"),),
+                n_units=1, dtype="float32")
+    base.update(over)
+    return ModelConfig(**base)
+
+
+def _qkv(b, s, h, kvh, hd, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (b, s, h, hd)),
+            jax.random.normal(ks[1], (b, s, kvh, hd)),
+            jax.random.normal(ks[2], (b, s, kvh, hd)))
+
+
+@pytest.mark.parametrize("window", [None, 700],
+                         ids=["global", "windowed"])
+@pytest.mark.parametrize("softcap", [None, 30.0], ids=["nocap", "softcap"])
+def test_chunked_matches_direct(window, softcap):
+    cfg = _cfg(attn_softcap=softcap)
+    s = 2048  # above threshold when squared
+    q, k, v = _qkv(1, s, 4, 2, 16)
+    qpos = jnp.arange(s)
+    mask = qpos[None, None, :] <= qpos[None, :, None]
+    if window is not None:
+        mask = mask & (qpos[None, None, :] > qpos[None, :, None] - window)
+    direct = A._sdpa(q, k, v, mask, cfg)
+    chunked = A._sdpa_chunked(q, k, v, cfg, q0=0, k0=0, causal=True,
+                              window=window)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(direct),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_respects_position_offset():
+    cfg = _cfg()
+    s = 2048
+    q, k, v = _qkv(1, s, 4, 2, 16, seed=1)
+    a = A._sdpa_chunked(q, k, v, cfg, q0=0, k0=0, causal=True, window=None)
+    b = A._sdpa_chunked(q, k, v, cfg, q0=1000, k0=1000, causal=True,
+                        window=None)
+    # same relative positions -> identical outputs
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_chunked_is_differentiable():
+    cfg = _cfg()
+    s = 2048
+    q, k, v = _qkv(1, s, 4, 2, 16, seed=2)
+
+    def f(q):
+        return jnp.sum(A._sdpa_chunked(q, k, v, cfg, q0=0, k0=0,
+                                       causal=True, window=None) ** 2)
+    g = jax.grad(f)(q)
+    assert bool(jnp.all(jnp.isfinite(g)))
+    assert float(jnp.max(jnp.abs(g))) > 0
+
+
+def test_apply_attn_uses_chunked_above_threshold():
+    """Full-layer equivalence across the threshold boundary: a config
+    evaluated at S=2100 (chunked) equals a manual direct computation."""
+    cfg = _cfg()
+    spec = LayerSpec(kind="attn")
+    key = jax.random.PRNGKey(3)
+    p = A.init_attn(key, dataclasses.replace(cfg))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (1, 2100, 64))
+    out, _ = A.apply_attn(p, x, cfg, spec, 0)
+    assert out.shape == (1, 2100, 64)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    # spot-check the last position against a small-window recompute
+    q, k, v = A._qkv(p, x, cfg, jnp.arange(2100)[None])
+    mask = (jnp.arange(2100)[None, None, :]
+            <= jnp.arange(2100)[None, :, None])
+    direct = A._sdpa(q, k, v, mask, cfg)
+    direct_out = jnp.einsum("bshk,hkd->bsd", direct, p["wo"])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(direct_out),
+                               rtol=2e-4, atol=2e-4)

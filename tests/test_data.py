@@ -1,0 +1,67 @@
+"""Data pipeline: statelessness (restart invariance), shard disjointness,
+signal learnability, prefetcher correctness."""
+import numpy as np
+
+from repro.data.pipeline import MemmapCorpus, Prefetcher, SyntheticMarkov
+
+
+def test_batches_are_stateless_and_deterministic():
+    d1 = SyntheticMarkov(vocab=97, seq_len=32, global_batch=4, seed=5)
+    d2 = SyntheticMarkov(vocab=97, seq_len=32, global_batch=4, seed=5)
+    for step in (0, 3, 1000):
+        b1, b2 = d1.batch(step), d2.batch(step)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        np.testing.assert_array_equal(b1["labels"], b2["labels"])
+    assert not np.array_equal(d1.batch(0)["tokens"], d1.batch(1)["tokens"])
+
+
+def test_labels_are_next_token_shift():
+    d = SyntheticMarkov(vocab=50, seq_len=16, global_batch=2, seed=0)
+    b = d.batch(0)
+    # the label at t equals the token at t+1
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_shards_are_disjoint_streams():
+    shards = [SyntheticMarkov(vocab=97, seq_len=8, global_batch=8, seed=1,
+                              shard=i, n_shards=4) for i in range(4)]
+    batches = [s.batch(0)["tokens"] for s in shards]
+    assert all(b.shape == (2, 8) for b in batches)
+    flat = [b.tobytes() for b in batches]
+    assert len(set(flat)) == 4  # no two shards identical
+
+
+def test_markov_signal_present():
+    """perm[t] follows t with p_signal — measurable structure."""
+    d = SyntheticMarkov(vocab=64, seq_len=512, global_batch=4, seed=2,
+                        p_signal=0.9)
+    b = d.batch(0)
+    perm = d._perm()
+    hits = (perm[b["tokens"]] == b["labels"]).mean()
+    assert 0.85 < hits < 0.95
+
+
+def test_memmap_corpus(tmp_path):
+    path = str(tmp_path / "toks.bin")
+    arr = (np.arange(10000) % 251).astype(np.uint16)
+    arr.tofile(path)
+    d = MemmapCorpus(path=path, vocab=256, seq_len=64, global_batch=4,
+                     seed=3)
+    b = d.batch(0)
+    assert b["tokens"].shape == (4, 64)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+    b2 = d.batch(0)
+    np.testing.assert_array_equal(b["tokens"], b2["tokens"])
+
+
+def test_prefetcher_yields_in_order():
+    d = SyntheticMarkov(vocab=31, seq_len=8, global_batch=2, seed=4)
+    pf = Prefetcher(d, start_step=10)
+    try:
+        for want in (10, 11, 12):
+            step, batch = pf.next()
+            assert step == want
+            np.testing.assert_array_equal(batch["tokens"],
+                                          d.batch(want)["tokens"])
+    finally:
+        pf.close()

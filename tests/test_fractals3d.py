@@ -1,0 +1,87 @@
+"""3D Squeeze extension (paper §5 future work): lambda3/nu3 inverse
+property, compact-volume conservation, membership == 3D mask, MRF."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fractals3d as f3
+
+ALL3D = list(f3.REGISTRY3D.values())
+
+
+def _all_compact(frac, r):
+    nx, ny, nz = frac.compact_dims(r)
+    cz, cy, cx = np.meshgrid(np.arange(nz), np.arange(ny), np.arange(nx),
+                             indexing="ij")
+    return (jnp.asarray(cx.reshape(-1)), jnp.asarray(cy.reshape(-1)),
+            jnp.asarray(cz.reshape(-1)))
+
+
+@pytest.mark.parametrize("frac", ALL3D, ids=lambda f: f.name)
+@pytest.mark.parametrize("r", [0, 1, 2, 3])
+def test_compact_dims_hold_volume(frac, r):
+    nx, ny, nz = frac.compact_dims(r)
+    assert nx * ny * nz == frac.volume(r)
+
+
+@pytest.mark.parametrize("frac", ALL3D, ids=lambda f: f.name)
+@pytest.mark.parametrize("r", [1, 2])
+def test_lambda3_bijects_onto_fractal(frac, r):
+    if frac.volume(r) > 200000:
+        pytest.skip("too large for exhaustive 3D check")
+    cx, cy, cz = _all_compact(frac, r)
+    ex, ey, ez = f3.lambda3_map(frac, r, cx, cy, cz)
+    n = frac.side(r)
+    flat = (np.asarray(ez).astype(np.int64) * n + np.asarray(ey)) * n \
+        + np.asarray(ex)
+    assert len(np.unique(flat)) == frac.volume(r)
+    mask = frac.mask(r)
+    assert mask[np.asarray(ez), np.asarray(ey), np.asarray(ex)].all()
+
+
+@pytest.mark.parametrize("frac", ALL3D, ids=lambda f: f.name)
+@pytest.mark.parametrize("r", [1, 2])
+def test_nu3_inverts_lambda3(frac, r):
+    if frac.volume(r) > 200000:
+        pytest.skip("too large")
+    cx, cy, cz = _all_compact(frac, r)
+    ex, ey, ez = f3.lambda3_map(frac, r, cx, cy, cz)
+    bx, by, bz = f3.nu3_map(frac, r, ex, ey, ez)
+    np.testing.assert_array_equal(np.asarray(bx), np.asarray(cx))
+    np.testing.assert_array_equal(np.asarray(by), np.asarray(cy))
+    np.testing.assert_array_equal(np.asarray(bz), np.asarray(cz))
+
+
+@pytest.mark.parametrize("frac", ALL3D, ids=lambda f: f.name)
+def test_membership_matches_mask(frac):
+    r = 2
+    n = frac.side(r)
+    gz, gy, gx = np.meshgrid(*[np.arange(n)] * 3, indexing="ij")
+    got = f3.is_fractal3(frac, r, jnp.asarray(gx.reshape(-1)),
+                         jnp.asarray(gy.reshape(-1)),
+                         jnp.asarray(gz.reshape(-1)))
+    want = frac.mask(r).reshape(-1) > 0
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_menger_mrf():
+    """Menger sponge: MRF = 27^r / 20^r = 1.35^r."""
+    assert abs(f3.MENGER.mrf(5) - 1.35 ** 5) < 1e-6
+    # sierpinski3d packs much harder: 8^r vs 4^r = 2^r
+    assert f3.SIERPINSKI3D.mrf(10) == 2.0 ** 10
+
+
+@given(st.integers(min_value=1, max_value=10), st.data())
+@settings(max_examples=60, deadline=None)
+def test_property_roundtrip_sierpinski3d(r, data):
+    frac = f3.SIERPINSKI3D
+    nx, ny, nz = frac.compact_dims(r)
+    cx = data.draw(st.integers(0, nx - 1))
+    cy = data.draw(st.integers(0, ny - 1))
+    cz = data.draw(st.integers(0, nz - 1))
+    ex, ey, ez = f3.lambda3_map(frac, r, jnp.asarray([cx]),
+                                jnp.asarray([cy]), jnp.asarray([cz]))
+    assert bool(f3.is_fractal3(frac, r, ex, ey, ez)[0])
+    bx, by, bz = f3.nu3_map(frac, r, ex, ey, ez)
+    assert (int(bx[0]), int(by[0]), int(bz[0])) == (cx, cy, cz)

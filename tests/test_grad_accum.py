@@ -1,0 +1,38 @@
+"""Gradient accumulation: accum_steps=K must match the single-shot step
+(same loss, same updated params) when microbatches are balanced."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.launch import specs as specs_lib
+from repro.models import model as model_lib
+from repro.optim import adamw
+
+
+def test_accum_matches_single_shot():
+    cfg = configs.get_smoke_config("smollm-135m")
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=10,
+                                weight_decay=0.0)
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    opt1 = adamw.init(opt_cfg, params)
+    opt1 = jax.tree.map(lambda a: jnp.array(a, copy=True), opt1)
+    opt2 = jax.tree.map(lambda a: jnp.array(a, copy=True), opt1)
+
+    b = 8
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, 32), 0,
+                                cfg.vocab)
+    labels = jax.random.randint(jax.random.PRNGKey(2), (b, 32), 0,
+                                cfg.vocab)
+    batch = {"tokens": tokens, "labels": labels}
+
+    step1 = specs_lib.make_train_step(cfg, opt_cfg, accum_steps=1)
+    step4 = specs_lib.make_train_step(cfg, opt_cfg, accum_steps=4)
+
+    p1, o1, m1 = step1(params, opt1, batch)
+    p4, o4, m4 = step4(params, opt2, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-5)
+    for a, b_ in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=5e-4, atol=5e-6)

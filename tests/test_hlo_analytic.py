@@ -1,0 +1,71 @@
+"""utils/hlo.py collective parser + utils/analytic.py model sanity."""
+import pytest
+
+from repro import configs
+from repro.utils import analytic, hlo
+
+
+def test_collective_parser_counts_output_bytes():
+    txt = """
+  %x = f32[64,512]{1,0} all-reduce(%dot), channel_id=1
+  %y = (f32[8,4]{1,0}, f32[8,4]{1,0}) all-gather(%a, %b), channel_id=2
+  %z = bf16[128]{0} reduce-scatter(%c), channel_id=3
+  %w = f32[2,2]{1,0} all-to-all(%d)
+  %p = u32[16]{0} collective-permute(%e)
+  %skip = f32[9]{0} add(%f, %g)
+"""
+    out = hlo.collective_bytes(txt)
+    assert out["all-reduce"] == 64 * 512 * 4
+    assert out["all-gather"] == 2 * 8 * 4 * 4
+    assert out["reduce-scatter"] == 128 * 2
+    assert out["all-to-all"] == 2 * 2 * 4
+    assert out["collective-permute"] == 16 * 4
+    assert out["total"] == sum(out[k] for k in (
+        "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+        "collective-permute"))
+
+
+def test_collective_parser_skips_done_counts_start():
+    txt = """
+  %s = f32[1024]{0} all-gather-start(%a)
+  %d = f32[1024]{0} all-gather-done(%s)
+"""
+    out = hlo.collective_bytes(txt)
+    assert out["all-gather"] == 1024 * 4  # start counted once, done skipped
+
+
+def test_roofline_terms_and_bottleneck():
+    r = hlo.Roofline(flops=197e12, hbm_bytes=819e9, coll_bytes=0.0,
+                     n_chips=4, model_flops=4 * 197e12)
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_memory - 1.0) < 1e-9
+    assert r.t_collective == 0.0
+    assert r.bottleneck in ("compute", "memory")
+    assert abs(r.useful_flops_ratio - 1.0) < 1e-9
+    assert abs(r.mfu_bound - 1.0) < 1e-9
+
+
+@pytest.mark.parametrize("arch", list(configs.ALL_ARCHS))
+@pytest.mark.parametrize("shape", ["train_4k", "decode_32k"])
+def test_analytic_model_sane(arch, shape):
+    cfg = configs.get_config(arch)
+    mesh = analytic.MeshModel()
+    roof = analytic.analytic_roofline(cfg, shape, mesh)
+    assert roof.flops > 0
+    assert roof.hbm_bytes > 0
+    assert roof.model_flops > 0
+    assert 0 < roof.mfu_bound <= 1.0, (arch, shape, roof.mfu_bound)
+    if shape == "train_4k":
+        # executed >= useful (remat + attention overhead)
+        assert roof.flops * mesh.n_chips >= roof.model_flops * 0.95
+        assert 0.3 <= roof.useful_flops_ratio <= 1.05
+
+
+def test_flops_model_moe_counts_active_only():
+    mix = configs.get_config("mixtral-8x22b")
+    full = mix.param_count()
+    active = mix.active_param_count()
+    assert active < 0.45 * full  # top-2 of 8 experts + attn
+    fl = analytic.flops_model(mix, "train_4k")
+    assert abs(fl["useful"] - 6.0 * active * 256 * 4096) / fl["useful"] \
+        < 1e-6

@@ -1,0 +1,77 @@
+"""Per-kernel allclose tests: nu_map / lambda_map Pallas kernels (interpret
+mode) vs the pure-jnp oracles, swept over fractals, levels and batch shapes.
+Integer maps must be *exact*."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fractals, maps
+from repro.kernels import ops, ref
+
+ALL_FRACTALS = list(fractals.REGISTRY.values())
+
+
+def _random_expanded_coords(frac, r, shape, seed, spill=2):
+    """Random expanded coords, including out-of-bounds and hole positions."""
+    n = frac.side(r)
+    rng = np.random.default_rng(seed)
+    ex = rng.integers(-spill, n + spill, size=shape).astype(np.int32)
+    ey = rng.integers(-spill, n + spill, size=shape).astype(np.int32)
+    return jnp.asarray(ex), jnp.asarray(ey)
+
+
+@pytest.mark.parametrize("frac", ALL_FRACTALS, ids=lambda f: f.name)
+@pytest.mark.parametrize("r", [1, 2, 4])
+@pytest.mark.parametrize("shape", [(7,), (256,), (3, 130)])
+def test_nu_kernel_exact(frac, r, shape):
+    ex, ey = _random_expanded_coords(frac, r, shape, seed=r * 100 + len(shape))
+    cx_k, cy_k, valid_k = ops.nu_map_tc(frac, r, ex, ey, interpret=True)
+    cx_r, cy_r, valid_r = ref.nu_ref(frac, r, ex, ey)
+    np.testing.assert_array_equal(np.asarray(valid_k), np.asarray(valid_r))
+    m = np.asarray(valid_r)
+    np.testing.assert_array_equal(np.asarray(cx_k)[m], np.asarray(cx_r)[m])
+    np.testing.assert_array_equal(np.asarray(cy_k)[m], np.asarray(cy_r)[m])
+
+
+@pytest.mark.parametrize("frac", ALL_FRACTALS, ids=lambda f: f.name)
+@pytest.mark.parametrize("r", [1, 2, 4])
+@pytest.mark.parametrize("shape", [(5,), (256,), (2, 300)])
+def test_lambda_kernel_exact(frac, r, shape):
+    rows, cols = frac.compact_dims(r)
+    rng = np.random.default_rng(r * 7 + len(shape))
+    cx = jnp.asarray(rng.integers(0, cols, size=shape).astype(np.int32))
+    cy = jnp.asarray(rng.integers(0, rows, size=shape).astype(np.int32))
+    ex_k, ey_k = ops.lambda_map_tc(frac, r, cx, cy, interpret=True)
+    ex_r, ey_r = ref.lambda_ref(frac, r, cx, cy)
+    np.testing.assert_array_equal(np.asarray(ex_k), np.asarray(ex_r))
+    np.testing.assert_array_equal(np.asarray(ey_k), np.asarray(ey_r))
+
+
+def test_kernels_roundtrip_deep_level():
+    """lambda kernel -> nu kernel roundtrip at a deep level (r=16)."""
+    frac, r = fractals.SIERPINSKI, 16
+    rows, cols = frac.compact_dims(r)
+    rng = np.random.default_rng(0)
+    cx = jnp.asarray(rng.integers(0, cols, size=512).astype(np.int32))
+    cy = jnp.asarray(rng.integers(0, rows, size=512).astype(np.int32))
+    ex, ey = ops.lambda_map_tc(frac, r, cx, cy, interpret=True)
+    bx, by, valid = ops.nu_map_tc(frac, r, ex, ey, interpret=True)
+    assert bool(jnp.all(valid))
+    np.testing.assert_array_equal(np.asarray(bx), np.asarray(cx))
+    np.testing.assert_array_equal(np.asarray(by), np.asarray(cy))
+
+
+def test_nu_kernel_matches_matmul_reference():
+    """Kernel agrees with the non-Pallas MXU formulation (same encoding)."""
+    frac, r = fractals.CARPET, 3
+    n = frac.side(r)
+    ey, ex = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
+    ex = jnp.asarray(ex.reshape(-1).astype(np.int32))
+    ey = jnp.asarray(ey.reshape(-1).astype(np.int32))
+    valid = maps.is_fractal(frac, r, ex, ey)
+    cx_k, cy_k, valid_k = ops.nu_map_tc(frac, r, ex, ey, interpret=True)
+    np.testing.assert_array_equal(np.asarray(valid_k), np.asarray(valid))
+    cx_m, cy_m = maps.nu_map_matmul(frac, r, ex, ey)
+    m = np.asarray(valid)
+    np.testing.assert_array_equal(np.asarray(cx_k)[m], np.asarray(cx_m)[m])
+    np.testing.assert_array_equal(np.asarray(cy_k)[m], np.asarray(cy_m)[m])

@@ -1,0 +1,79 @@
+"""int8 KV cache: numerics close to the bf16 cache, exact-size halving,
+ring-buffer compatibility, decode consistency within quantization error."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import attention as A
+from repro.models import model as model_lib
+from repro.models.config import LayerSpec, ModelConfig
+
+
+def _cfg(window=None, kv_quant=True):
+    return ModelConfig(
+        name="t", d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=128, unit=(LayerSpec(kind="attn", window=window),),
+        n_units=1, dtype="float32", kv_quant=kv_quant)
+
+
+def test_quantize_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 2, 8, 16)) * 3.0
+    q, s = A._kv_quantize(x)
+    back = A._kv_dequantize(q, s, jnp.float32)
+    assert q.dtype == jnp.int8
+    rel = float(jnp.max(jnp.abs(back - x)) / jnp.max(jnp.abs(x)))
+    assert rel < 0.02
+
+
+@pytest.mark.parametrize("window", [None, 8], ids=["linear", "ring"])
+def test_cached_attention_close_to_fp(window):
+    cfgq = _cfg(window=window, kv_quant=True)
+    cfgf = _cfg(window=window, kv_quant=False)
+    spec = cfgq.unit[0]
+    p = A.init_attn(jax.random.PRNGKey(1), cfgq)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 4, 64))
+
+    cq = A.init_attn_cache(cfgq, spec, 2, 16)
+    cf = A.init_attn_cache(cfgf, spec, 2, 16)
+    assert cq["k"].dtype == jnp.int8
+    # int8 cache + fp32 scales ~ half the bf16 cache at hd=16; at the
+    # production head_dim=128 the overhead is 1/128 (check the ratio form)
+    bytes_q = cq["k"].size + 4 * cq["k_scale"].size
+    bytes_f = cf["k"].size * 4  # fp32 smoke dtype
+    assert bytes_q < bytes_f / 2
+
+    oq, cq = A.apply_attn(p, x, cfgq, spec, 0, cache=cq)
+    of, cf = A.apply_attn(p, x, cfgf, spec, 0, cache=cf)
+    np.testing.assert_allclose(np.asarray(oq), np.asarray(of),
+                               rtol=0.05, atol=0.05)
+    # continue decoding one token
+    x1 = jax.random.normal(jax.random.PRNGKey(3), (2, 1, 64))
+    oq1, _ = A.apply_attn(p, x1, cfgq, spec, 4, cache=cq)
+    of1, _ = A.apply_attn(p, x1, cfgf, spec, 4, cache=cf)
+    np.testing.assert_allclose(np.asarray(oq1), np.asarray(of1),
+                               rtol=0.05, atol=0.05)
+
+
+def test_full_model_decode_with_kv_quant():
+    cfg = dataclasses.replace(configs.get_smoke_config("gemma2-2b"),
+                              kv_quant=True)
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                cfg.vocab)
+    full_logits, _, _ = model_lib.forward(params, {"tokens": tokens}, cfg)
+    cache = model_lib.init_cache(cfg, 2, 12)
+    last, cache, extras = model_lib.prefill(
+        params, {"tokens": tokens[:, :8]}, cfg, cache)
+    # quantization error bounded: same argmax as the exact forward
+    for i in range(3):
+        pos = 8 + i
+        last, cache = model_lib.decode_step(
+            params, tokens[:, pos:pos + 1], pos, cfg, cache, extras=extras)
+        np.testing.assert_allclose(
+            np.asarray(last), np.asarray(full_logits[:, pos]),
+            rtol=0.08, atol=0.15,
+            err_msg=f"kv-quant decode step {i} diverged beyond int8 error")

@@ -1,0 +1,174 @@
+"""Unit + property tests for the lambda/nu space maps (paper Sections 3.3-3.4).
+
+The binding spec is: nu is the exact inverse of lambda on the fractal, the
+compact domain is a bijection onto the fractal cells, and the matmul (MXU)
+encodings agree exactly with the integer paths.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fractals, maps
+
+ALL_FRACTALS = list(fractals.REGISTRY.values())
+SMALL_LEVELS = [0, 1, 2, 3, 4]
+
+
+def _all_compact_coords(frac, r):
+    rows, cols = frac.compact_dims(r)
+    cy, cx = np.meshgrid(np.arange(rows), np.arange(cols), indexing="ij")
+    return cx.reshape(-1).astype(np.int32), cy.reshape(-1).astype(np.int32)
+
+
+# ----------------------------------------------------------------- geometry
+@pytest.mark.parametrize("frac", ALL_FRACTALS, ids=lambda f: f.name)
+@pytest.mark.parametrize("r", SMALL_LEVELS)
+def test_compact_dims_hold_volume(frac, r):
+    rows, cols = frac.compact_dims(r)
+    assert rows * cols == frac.volume(r)
+    assert rows == frac.k ** (r // 2)
+    assert cols == frac.k ** ((r + 1) // 2)
+
+
+@pytest.mark.parametrize("frac", ALL_FRACTALS, ids=lambda f: f.name)
+@pytest.mark.parametrize("r", SMALL_LEVELS)
+def test_mask_cell_count_is_volume(frac, r):
+    assert int(frac.mask(r).sum()) == frac.volume(r)
+
+
+def test_sierpinski_hnu_matches_paper_hash():
+    """Paper Eq. 22: H_nu[theta] == theta_x + theta_y for the Sierpinski."""
+    f = fractals.SIERPINSKI
+    for ty in range(2):
+        for tx in range(2):
+            code = f.h_nu[ty, tx]
+            if code >= 0:
+                assert code == tx + ty
+    assert f.h_nu[0, 1] == -1  # the single hole
+
+
+# ------------------------------------------------------------ lambda is a bijection
+@pytest.mark.parametrize("frac", ALL_FRACTALS, ids=lambda f: f.name)
+@pytest.mark.parametrize("r", [1, 2, 3])
+def test_lambda_bijects_compact_onto_fractal(frac, r):
+    cx, cy = _all_compact_coords(frac, r)
+    ex, ey = maps.lambda_map(frac, r, jnp.asarray(cx), jnp.asarray(cy))
+    ex, ey = np.asarray(ex), np.asarray(ey)
+    n = frac.side(r)
+    # all images are distinct fractal cells
+    flat = ey.astype(np.int64) * n + ex
+    assert len(np.unique(flat)) == frac.volume(r)
+    mask = frac.mask(r)
+    assert mask[ey, ex].all()
+
+
+@pytest.mark.parametrize("frac", ALL_FRACTALS, ids=lambda f: f.name)
+@pytest.mark.parametrize("r", [1, 2, 3])
+def test_nu_inverts_lambda(frac, r):
+    cx, cy = _all_compact_coords(frac, r)
+    ex, ey = maps.lambda_map(frac, r, jnp.asarray(cx), jnp.asarray(cy))
+    bx, by = maps.nu_map(frac, r, ex, ey)
+    np.testing.assert_array_equal(np.asarray(bx), cx)
+    np.testing.assert_array_equal(np.asarray(by), cy)
+
+
+@pytest.mark.parametrize("frac", ALL_FRACTALS, ids=lambda f: f.name)
+@pytest.mark.parametrize("r", [1, 2, 3])
+def test_membership_matches_mask(frac, r):
+    n = frac.side(r)
+    ey, ex = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
+    got = maps.is_fractal(frac, r, jnp.asarray(ex.reshape(-1)),
+                          jnp.asarray(ey.reshape(-1)))
+    want = frac.mask(r)[ey.reshape(-1), ex.reshape(-1)] > 0
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+# --------------------------------------------------------- scalar spec equality
+@pytest.mark.parametrize("frac", ALL_FRACTALS, ids=lambda f: f.name)
+def test_vectorised_matches_scalar_spec(frac):
+    r = 3
+    cx, cy = _all_compact_coords(frac, r)
+    ex, ey = maps.lambda_map(frac, r, jnp.asarray(cx), jnp.asarray(cy))
+    for i in range(0, len(cx), max(1, len(cx) // 37)):
+        sx, sy = maps.lambda_map_scalar(frac, r, int(cx[i]), int(cy[i]))
+        assert (int(ex[i]), int(ey[i])) == (sx, sy)
+        nx, ny = maps.nu_map_scalar(frac, r, sx, sy)
+        assert (nx, ny) == (int(cx[i]), int(cy[i]))
+
+
+# ------------------------------------------------------- MXU matmul encodings
+@pytest.mark.parametrize("frac", ALL_FRACTALS, ids=lambda f: f.name)
+@pytest.mark.parametrize("r", [1, 2, 3, 4])
+def test_matmul_encodings_exact(frac, r):
+    if frac.volume(r) > 20000:
+        r = min(r, 3)
+    cx, cy = _all_compact_coords(frac, r)
+    cx, cy = jnp.asarray(cx), jnp.asarray(cy)
+    ex, ey = maps.lambda_map(frac, r, cx, cy)
+    ex2, ey2 = maps.lambda_map_matmul(frac, r, cx, cy)
+    np.testing.assert_array_equal(np.asarray(ex), np.asarray(ex2))
+    np.testing.assert_array_equal(np.asarray(ey), np.asarray(ey2))
+    nx, ny = maps.nu_map(frac, r, ex, ey)
+    nx2, ny2 = maps.nu_map_matmul(frac, r, ex, ey)
+    np.testing.assert_array_equal(np.asarray(nx), np.asarray(nx2))
+    np.testing.assert_array_equal(np.asarray(ny), np.asarray(ny2))
+
+
+# ----------------------------------------------------------- property tests
+@st.composite
+def fractal_r_coord(draw):
+    frac = draw(st.sampled_from(ALL_FRACTALS))
+    # keep volumes moderate: k^r <= ~1e5
+    max_r = max(1, int(np.floor(np.log(1e5) / np.log(frac.k))))
+    r = draw(st.integers(min_value=1, max_value=min(max_r, 16)))
+    rows, cols = frac.compact_dims(r)
+    cx = draw(st.integers(min_value=0, max_value=cols - 1))
+    cy = draw(st.integers(min_value=0, max_value=rows - 1))
+    return frac, r, cx, cy
+
+
+@given(fractal_r_coord())
+@settings(max_examples=200, deadline=None)
+def test_property_nu_inverts_lambda_scalar(args):
+    frac, r, cx, cy = args
+    ex, ey = maps.lambda_map_scalar(frac, r, cx, cy)
+    n = frac.side(r)
+    assert 0 <= ex < n and 0 <= ey < n
+    assert maps.is_fractal_scalar(frac, r, ex, ey)
+    nx, ny = maps.nu_map_scalar(frac, r, ex, ey)
+    assert (nx, ny) == (cx, cy)
+
+
+@given(fractal_r_coord())
+@settings(max_examples=100, deadline=None)
+def test_property_matmul_matches_scalar(args):
+    frac, r, cx, cy = args
+    ex, ey = maps.lambda_map_scalar(frac, r, cx, cy)
+    ex2, ey2 = maps.lambda_map_matmul(frac, r, jnp.asarray([cx]),
+                                      jnp.asarray([cy]))
+    assert (int(ex2[0]), int(ey2[0])) == (ex, ey)
+    nx, ny = maps.nu_map_scalar(frac, r, ex, ey)
+    nx2, ny2 = maps.nu_map_matmul(frac, r, jnp.asarray([ex]),
+                                  jnp.asarray([ey]))
+    assert (int(nx2[0]), int(ny2[0])) == (nx, ny)
+
+
+@given(st.integers(min_value=1, max_value=18))
+@settings(max_examples=30, deadline=None)
+def test_property_sierpinski_deep_levels_roundtrip(r):
+    """Deep-level roundtrip on random corner-ish coordinates (no O(k^r) scan)."""
+    frac = fractals.SIERPINSKI
+    rows, cols = frac.compact_dims(r)
+    rng = np.random.default_rng(r)
+    cx = rng.integers(0, cols, size=16).astype(np.int32)
+    cy = rng.integers(0, rows, size=16).astype(np.int32)
+    ex, ey = maps.lambda_map(frac, r, jnp.asarray(cx), jnp.asarray(cy))
+    bx, by = maps.nu_map(frac, r, ex, ey)
+    np.testing.assert_array_equal(np.asarray(bx), cx)
+    np.testing.assert_array_equal(np.asarray(by), cy)
+    # matmul form stays exact at depth (fp32 < 2**24 products)
+    ex2, ey2 = maps.lambda_map_matmul(frac, r, jnp.asarray(cx),
+                                      jnp.asarray(cy))
+    np.testing.assert_array_equal(np.asarray(ex), np.asarray(ex2))
+    np.testing.assert_array_equal(np.asarray(ey), np.asarray(ey2))

@@ -1,0 +1,86 @@
+"""Mixed-level NBB fractals (paper §5 future work): inverse property,
+volume conservation, mask agreement, and exact reduction to the uniform
+maps when every level uses the same generator."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fractals, maps
+from repro.core.mixed import MixedFractal
+
+GENS = [fractals.SIERPINSKI, fractals.CARPET, fractals.VICSEK,
+        fractals.EMPTY_BOTTLES]
+
+
+def _all_compact(mf):
+    rows, cols = mf.compact_dims()
+    cy, cx = np.meshgrid(np.arange(rows), np.arange(cols), indexing="ij")
+    return (jnp.asarray(cx.reshape(-1).astype(np.int32)),
+            jnp.asarray(cy.reshape(-1).astype(np.int32)))
+
+
+CASES = [
+    ("sier-carpet", (fractals.SIERPINSKI, fractals.CARPET)),
+    ("carpet-vicsek-sier", (fractals.CARPET, fractals.VICSEK,
+                            fractals.SIERPINSKI)),
+    ("bottles-sier-sier", (fractals.EMPTY_BOTTLES, fractals.SIERPINSKI,
+                           fractals.SIERPINSKI)),
+]
+
+
+@pytest.mark.parametrize("name,levels", CASES, ids=[c[0] for c in CASES])
+def test_mixed_nu_inverts_lambda(name, levels):
+    mf = MixedFractal(name, levels)
+    rows, cols = mf.compact_dims()
+    assert rows * cols == mf.volume
+    cx, cy = _all_compact(mf)
+    ex, ey = mf.lambda_map(cx, cy)
+    bx, by, valid = mf.nu_map(ex, ey)
+    assert bool(jnp.all(valid))
+    np.testing.assert_array_equal(np.asarray(bx), np.asarray(cx))
+    np.testing.assert_array_equal(np.asarray(by), np.asarray(cy))
+
+
+@pytest.mark.parametrize("name,levels", CASES, ids=[c[0] for c in CASES])
+def test_mixed_lambda_lands_on_mask(name, levels):
+    mf = MixedFractal(name, levels)
+    cx, cy = _all_compact(mf)
+    ex, ey = mf.lambda_map(cx, cy)
+    mask = mf.mask()
+    assert int(mask.sum()) == mf.volume
+    assert mask[np.asarray(ey), np.asarray(ex)].all()
+    # and images are unique
+    n = mf.side
+    flat = np.asarray(ey).astype(np.int64) * n + np.asarray(ex)
+    assert len(np.unique(flat)) == mf.volume
+
+
+def test_uniform_mixed_reduces_to_standard_maps():
+    frac, r = fractals.SIERPINSKI, 4
+    mf = MixedFractal("uniform", (frac,) * r)
+    cx, cy = _all_compact(mf)
+    ex_m, ey_m = mf.lambda_map(cx, cy)
+    ex_s, ey_s = maps.lambda_map(frac, r, cx, cy)
+    np.testing.assert_array_equal(np.asarray(ex_m), np.asarray(ex_s))
+    np.testing.assert_array_equal(np.asarray(ey_m), np.asarray(ey_s))
+    bx_m, by_m, _ = mf.nu_map(ex_m, ey_m)
+    bx_s, by_s = maps.nu_map(frac, r, ex_s, ey_s)
+    np.testing.assert_array_equal(np.asarray(bx_m), np.asarray(bx_s))
+    np.testing.assert_array_equal(np.asarray(by_m), np.asarray(by_s))
+
+
+@given(st.lists(st.sampled_from(GENS), min_size=1, max_size=4))
+@settings(max_examples=40, deadline=None)
+def test_property_mixed_roundtrip(levels):
+    mf = MixedFractal("prop", tuple(levels))
+    if mf.volume > 50000:
+        return
+    cx, cy = _all_compact(mf)
+    # sample a handful
+    idx = np.linspace(0, len(cx) - 1, 17).astype(int)
+    ex, ey = mf.lambda_map(cx[idx], cy[idx])
+    bx, by, valid = mf.nu_map(ex, ey)
+    assert bool(jnp.all(valid))
+    np.testing.assert_array_equal(np.asarray(bx), np.asarray(cx[idx]))
+    np.testing.assert_array_equal(np.asarray(by), np.asarray(cy[idx]))

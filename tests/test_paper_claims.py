@@ -1,0 +1,50 @@
+"""Regression-locks on the paper's quantitative claims (EXPERIMENTS.md
+§Paper-validation): Table 2 MRFs exact, Fig. 10 points within
+plot-reading tolerance, r=20 capability, work-ratio growth."""
+import pytest
+
+from repro.core import fractals
+from repro.core.compact import BlockLayout
+
+TABLE2 = {1: 99.8, 2: 74.8, 4: 56.1, 8: 42.1, 16: 31.6, 32: 23.7}
+
+
+@pytest.mark.parametrize("rho,paper", sorted(TABLE2.items()))
+def test_table2_mrf_exact(rho, paper):
+    frac, r = fractals.SIERPINSKI, 16
+    bb = frac.side(r) ** 2
+    if rho == 1:
+        mem = frac.volume(r)
+    else:
+        m = rho.bit_length() - 1
+        mem = BlockLayout(frac, r, m).memory_bytes()
+    assert abs(bb / mem - paper) / paper < 0.005
+
+
+@pytest.mark.parametrize("frac,n,paper", [
+    (fractals.VICSEK, 3 ** 10, 400.0),
+    (fractals.SIERPINSKI, 2 ** 16, 105.0),
+    (fractals.CARPET, 3 ** 10, 3.4),
+])
+def test_fig10_points(frac, n, paper):
+    r = frac.level_of_side(n)
+    assert abs(frac.mrf(r) - paper) / paper < 0.25
+
+
+def test_r20_capability_claim():
+    """Paper §4.3: level 20 needs ~13-55 GB under Squeeze vs 4 TB BB
+    (4-byte cells); with 1-byte cells: 1 TiB vs ~10 GiB at rho=16."""
+    frac = fractals.SIERPINSKI
+    bb = frac.side(20) ** 2
+    sq = BlockLayout(frac, 20, 4).memory_bytes()
+    assert bb / 2 ** 40 >= 1.0          # >= 1 TiB
+    assert sq / 2 ** 30 < 16            # fits one accelerator's HBM
+    assert 80 < bb / sq < 120           # ~100x at rho=16
+
+
+def test_speedup_work_ratio_grows_with_level():
+    """The driver of Fig. 13's growth: BB work / fractal work = (s^2/k)^r."""
+    frac = fractals.SIERPINSKI
+    ratios = [frac.side(r) ** 2 / frac.volume(r) for r in (5, 9, 13, 16)]
+    assert all(b > a for a, b in zip(ratios, ratios[1:]))
+    assert abs(ratios[-1] - 99.85) < 0.1

@@ -1,0 +1,19 @@
+"""Sharded-vs-unsharded train-step equivalence (subprocess, 8 devices):
+the production sharding rules must preserve the math."""
+import os
+import pathlib
+import subprocess
+import sys
+
+
+def test_sharded_train_step_matches_unsharded():
+    script = pathlib.Path(__file__).parent / "_sharded_equality_check.py"
+    env = dict(os.environ)
+    repo = pathlib.Path(__file__).resolve().parents[1]
+    env["PYTHONPATH"] = str(repo / "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    out = subprocess.run([sys.executable, str(script)], env=env,
+                         capture_output=True, text=True, timeout=1800)
+    assert out.returncode == 0, \
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-4000:]}"
+    assert "SHARDED_EQ_OK" in out.stdout
