@@ -1,0 +1,98 @@
+"""Per-workload step timing on the Sierpinski triangle: one step of each
+workload (life, totalistic highlife, heat, Gray-Scott) on the cell, block,
+and Pallas-strips engines, plus the batched-runner throughput at batch 8.
+
+    PYTHONPATH=src python benchmarks/workloads_bench.py [--r 9] [--m 2]
+                                                        [--smoke]
+
+Writes BENCH_workloads.json (one record per (workload, engine)) and prints
+the common.emit CSV rows. ``--smoke`` shrinks the level so the script
+doubles as a CI check that every (workload, engine) pair runs end to end.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+import jax  # noqa: E402
+
+from repro.core import fractals  # noqa: E402
+from repro.core.stencil import make_engine  # noqa: E402
+from repro.workloads import (GRAY_SCOTT, HEAT, HIGHLIFE, LIFE,  # noqa: E402
+                             BatchedRunner)
+from benchmarks.common import emit, time_fn  # noqa: E402
+
+ENGINES = ("cell", "block", "pallas-strips")
+WORKLOADS = (LIFE, HIGHLIFE, HEAT, GRAY_SCOTT)
+
+
+def bench_one(kind: str, frac, r: int, m: int, wl, iters: int) -> dict:
+    eng = make_engine(kind, frac, r, m, workload=wl)
+    state = eng.init_random(seed=0)
+    us = time_fn(eng.step, state, iters=iters)
+    cells = frac.volume(r)
+    rec = {
+        "workload": wl.name, "engine": kind, "fractal": frac.name,
+        "r": r, "m": m, "us_per_step": us,
+        "cells": cells, "mcells_per_s": cells / us,
+        "state_bytes": eng.memory_bytes(
+            dtype_size=jax.numpy.dtype(wl.dtype).itemsize),
+    }
+    emit(f"workloads/{wl.name}/{kind}", us,
+         f"r={r};m={m};mcups={rec['mcells_per_s']:.1f}")
+    return rec
+
+
+def bench_batched(frac, r: int, m: int, wl, iters: int, batch: int) -> dict:
+    runner = BatchedRunner()
+    states = runner.init_batch("cell", frac, r, seeds=range(batch),
+                               workload=wl)
+    us = time_fn(lambda s: runner.step("cell", frac, r, s, workload=wl),
+                 states, iters=iters)
+    cells = frac.volume(r) * batch
+    rec = {
+        "workload": wl.name, "engine": f"runner-cell-b{batch}",
+        "fractal": frac.name, "r": r, "m": m, "us_per_step": us,
+        "cells": cells, "mcells_per_s": cells / us,
+        "builds": runner.stats.builds, "traces": runner.stats.traces,
+    }
+    emit(f"workloads/{wl.name}/runner-b{batch}", us,
+         f"r={r};mcups={rec['mcells_per_s']:.1f}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--r", type=int, default=9)
+    ap.add_argument("--m", type=int, default=2)
+    ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny level, 2 iters (CI end-to-end check)")
+    ap.add_argument("--out", default="BENCH_workloads.json")
+    args = ap.parse_args()
+    if args.smoke:
+        args.r, args.m, args.iters = 5, 2, 2
+
+    frac = fractals.SIERPINSKI
+    records = []
+    for wl in WORKLOADS:
+        for kind in ENGINES:
+            records.append(bench_one(kind, frac, args.r, args.m, wl,
+                                     args.iters))
+        records.append(bench_batched(frac, args.r, args.m, wl, args.iters,
+                                     args.batch))
+
+    out = pathlib.Path(args.out)
+    out.write_text(json.dumps({
+        "fractal": frac.name, "r": args.r, "m": args.m,
+        "backend": jax.default_backend(), "records": records}, indent=2))
+    print(f"wrote {out} ({len(records)} records)")
+
+
+if __name__ == "__main__":
+    main()

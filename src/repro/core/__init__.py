@@ -7,7 +7,7 @@ from repro.core.maps import (is_fractal, lambda_map, lambda_map_matmul,
 from repro.core.compact import (BlockLayout, MOORE_DIRS, compact_to_expanded,
                                 expanded_to_compact)
 from repro.core.stencil import (SqueezeBlockEngine, SqueezeCellEngine,
-                                make_engine)
+                                SqueezePallasEngine, make_engine)
 from repro.core.baselines import BBEngine, LambdaEngine, life_rule
 
 __all__ = [
@@ -15,6 +15,6 @@ __all__ = [
     "VICSEK", "NBBFractal", "get_fractal", "is_fractal", "lambda_map",
     "lambda_map_matmul", "nu_map", "nu_map_matmul", "nu_with_membership",
     "BlockLayout", "MOORE_DIRS", "compact_to_expanded", "expanded_to_compact",
-    "SqueezeBlockEngine", "SqueezeCellEngine", "make_engine", "BBEngine",
-    "LambdaEngine", "life_rule",
+    "SqueezeBlockEngine", "SqueezeCellEngine", "SqueezePallasEngine",
+    "make_engine", "BBEngine", "LambdaEngine", "life_rule",
 ]

@@ -8,9 +8,12 @@
                         *expanded memory* (paper's approach 2). Solves P1,
                         not P2.
 
-Both simulate Conway's game of life adapted to the fractal: only fractal
-cells live or are counted as neighbors (holes and out-of-bounds read 0),
-with the standard B3/S23 rule applied on fractal cells only.
+Both are parameterized by a ``StencilWorkload`` (default: the paper's
+game-of-life adaptation): only fractal cells carry state or are counted as
+neighbors (holes and out-of-bounds read 0 — dead for CA rules, Dirichlet-0
+for the PDE rules), and the workload's update rule is applied on fractal
+cells only. Multi-channel workloads carry a leading channel axis:
+state (C, n, n).
 """
 from __future__ import annotations
 
@@ -23,25 +26,29 @@ import jax.numpy as jnp
 from repro.core import maps
 from repro.core.compact import MOORE_DIRS
 from repro.core.fractals import NBBFractal
+from repro.workloads.base import (StencilWorkload, check_workload_ndim,
+                                  weighted_gather_agg, weighted_moore_agg)
+from repro.workloads.rules import LIFE, life_rule  # noqa: F401 (re-export)
 
 Array = jnp.ndarray
 
 
-def life_rule(alive: Array, neighbors: Array) -> Array:
-    """Conway B3/S23, uint8 in/out."""
-    born = neighbors == 3
-    survive = (alive > 0) & (neighbors == 2)
-    return (born | survive).astype(jnp.uint8)
-
-
 def _moore_counts(padded: Array) -> Array:
-    """Sum of the 8 Moore neighbors from a (+1)-padded 2D array."""
-    c = None
-    for dx, dy in MOORE_DIRS:
-        sl = padded[1 + dy: padded.shape[0] - 1 + dy,
-                    1 + dx: padded.shape[1] - 1 + dx]
-        c = sl.astype(jnp.int32) if c is None else c + sl
-    return c
+    """Sum of the 8 Moore neighbors from a (+1)-padded array (trailing two
+    axes are spatial; leading channel/block axes broadcast through)."""
+    return weighted_moore_agg(padded, (1,) * 8, jnp.int32)
+
+
+def _pad_spatial(state: Array) -> Array:
+    """Zero-pad the trailing two (spatial) axes by 1."""
+    pad = [(0, 0)] * (state.ndim - 2) + [(1, 1), (1, 1)]
+    return jnp.pad(state, pad)
+
+
+def _init_masked(workload: StencilWorkload, seed: int, shape,
+                 mask: Array) -> Array:
+    field = workload.init(jax.random.PRNGKey(seed), shape)
+    return field * mask.astype(field.dtype)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,26 +57,30 @@ class BBEngine:
 
     frac: NBBFractal
     r: int
+    workload: StencilWorkload = LIFE
+
+    def __post_init__(self):
+        check_workload_ndim(self.workload, 2)
 
     def init_random(self, seed: int) -> Array:
         n = self.frac.side(self.r)
         mask = jnp.asarray(self.frac.mask(self.r))
-        bits = jax.random.bernoulli(jax.random.PRNGKey(seed), 0.5, (n, n))
-        return (bits & (mask > 0)).astype(jnp.uint8)
+        return _init_masked(self.workload, seed, (n, n), mask)
 
     @partial(jax.jit, static_argnums=0)
     def step(self, state: Array) -> Array:
+        wl = self.workload
         mask = jnp.asarray(self.frac.mask(self.r))
-        padded = jnp.pad(state, 1)
-        nxt = life_rule(state, _moore_counts(padded))
-        return nxt * mask
+        padded = _pad_spatial(state)
+        agg = weighted_moore_agg(padded, wl.weights2d, wl.agg_dtype)
+        return wl.apply(state, agg, mask)
 
     def run(self, state: Array, steps: int) -> Array:
         return jax.lax.fori_loop(0, steps, lambda _, s: self.step(s), state)
 
     def memory_bytes(self, dtype_size: int = 1) -> int:
         n = self.frac.side(self.r)
-        return n * n * dtype_size
+        return self.workload.n_channels * n * n * dtype_size
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,30 +94,36 @@ class LambdaEngine:
 
     frac: NBBFractal
     r: int
+    workload: StencilWorkload = LIFE
+
+    def __post_init__(self):
+        check_workload_ndim(self.workload, 2)
 
     def init_random(self, seed: int) -> Array:
-        return BBEngine(self.frac, self.r).init_random(seed)
+        return BBEngine(self.frac, self.r, self.workload).init_random(seed)
 
     @partial(jax.jit, static_argnums=0)
     def step(self, state: Array) -> Array:
-        frac, r = self.frac, self.r
+        frac, r, wl = self.frac, self.r, self.workload
         rows, cols = frac.compact_dims(r)
         cy, cx = jnp.meshgrid(jnp.arange(rows, dtype=jnp.int32),
                               jnp.arange(cols, dtype=jnp.int32), indexing="ij")
         ex, ey = maps.lambda_map(frac, r, cx, cy)
-        padded = jnp.pad(state, 1)
-        count = jnp.zeros(ex.shape, jnp.int32)
-        for dx, dy in MOORE_DIRS:
-            count = count + padded[ey + 1 + dy, ex + 1 + dx].astype(jnp.int32)
-        alive = state[ey, ex]
-        nxt_vals = life_rule(alive, count)
+        padded = _pad_spatial(state)
+        agg = weighted_gather_agg(
+            MOORE_DIRS, wl.weights2d,
+            lambda d: padded[..., ey + 1 + d[1], ex + 1 + d[0]],
+            state.shape[:-2] + ex.shape, wl.agg_dtype)
+        center = state[..., ey, ex]
+        # every enumerated cell is a fractal cell: no mask needed
+        nxt_vals = wl.apply(center, agg, None)
         # scatter back into (a fresh copy of) expanded memory
         nxt = jnp.zeros_like(state)
-        return nxt.at[ey, ex].set(nxt_vals)
+        return nxt.at[..., ey, ex].set(nxt_vals.astype(state.dtype))
 
     def run(self, state: Array, steps: int) -> Array:
         return jax.lax.fori_loop(0, steps, lambda _, s: self.step(s), state)
 
     def memory_bytes(self, dtype_size: int = 1) -> int:
         n = self.frac.side(self.r)
-        return n * n * dtype_size
+        return self.workload.n_channels * n * n * dtype_size

@@ -23,15 +23,11 @@ import numpy as np
 
 from repro.core import maps
 from repro.core.fractals import NBBFractal
+#: Moore neighborhood directions (dx, dy), y growing downward — defined in
+#: the dependency-free workloads layer, re-exported here for the engines.
+from repro.workloads.base import MOORE_DIRS  # noqa: F401
 
 Array = jnp.ndarray
-
-#: Moore neighborhood directions (dx, dy), y growing downward.
-MOORE_DIRS: Tuple[Tuple[int, int], ...] = (
-    (-1, -1), (0, -1), (1, -1),
-    (-1, 0), (1, 0),
-    (-1, 1), (0, 1), (1, 1),
-)
 
 
 def compact_meshgrid(frac: NBBFractal, r: int) -> Tuple[Array, Array]:
@@ -43,19 +39,22 @@ def compact_meshgrid(frac: NBBFractal, r: int) -> Tuple[Array, Array]:
 
 
 def compact_to_expanded(frac: NBBFractal, r: int, state_c: Array) -> Array:
-    """Scatter a compact state into its (n, n) expanded embedding (holes 0)."""
+    """Scatter a compact state into its (n, n) expanded embedding (holes 0).
+
+    Trailing two axes are spatial; leading (channel) axes pass through.
+    """
     n = frac.side(r)
     cx, cy = compact_meshgrid(frac, r)
     ex, ey = maps.lambda_map(frac, r, cx, cy)
-    out = jnp.zeros((n, n), dtype=state_c.dtype)
-    return out.at[ey, ex].set(state_c)
+    out = jnp.zeros(state_c.shape[:-2] + (n, n), dtype=state_c.dtype)
+    return out.at[..., ey, ex].set(state_c)
 
 
 def expanded_to_compact(frac: NBBFractal, r: int, state_e: Array) -> Array:
     """Gather an expanded state into compact form (reads only fractal cells)."""
     cx, cy = compact_meshgrid(frac, r)
     ex, ey = maps.lambda_map(frac, r, cx, cy)
-    return state_e[ey, ex]
+    return state_e[..., ey, ex]
 
 
 # ======================================================================
@@ -150,7 +149,8 @@ class BlockLayout:
 
     # ------------------------------------------------------------ conversions
     def to_expanded(self, state_b: Array) -> Array:
-        """Block state (n_blocks, rho, rho) -> (n, n) expanded embedding."""
+        """Block state (C?, n_blocks, rho, rho) -> (C?, n, n) expanded
+        embedding (leading channel axes pass through)."""
         n = self.frac.side(self.r)
         org = jnp.asarray(self.block_origin_expanded)  # (n_blocks, 2)
         rho = self.rho
@@ -158,18 +158,19 @@ class BlockLayout:
         # absolute cell coords per (block, i, j)
         ax = org[:, 0, None, None] + ix[None]
         ay = org[:, 1, None, None] + iy[None]
-        out = jnp.zeros((n, n), dtype=state_b.dtype)
-        return out.at[ay, ax].set(state_b)
+        out = jnp.zeros(state_b.shape[:-3] + (n, n), dtype=state_b.dtype)
+        return out.at[..., ay, ax].set(state_b)
 
     def from_expanded(self, state_e: Array) -> Array:
-        """(n, n) expanded embedding -> block state (n_blocks, rho, rho)."""
+        """(C?, n, n) expanded embedding -> block state (C?, n_blocks,
+        rho, rho)."""
         org = jnp.asarray(self.block_origin_expanded)
         rho = self.rho
         iy, ix = jnp.meshgrid(jnp.arange(rho), jnp.arange(rho), indexing="ij")
         ax = org[:, 0, None, None] + ix[None]
         ay = org[:, 1, None, None] + iy[None]
-        mask = jnp.asarray(self.micro_mask)[None]
-        return state_e[ay, ax] * mask.astype(state_e.dtype)
+        mask = jnp.asarray(self.micro_mask)
+        return state_e[..., ay, ax] * mask.astype(state_e.dtype)
 
     def pad_with_halo(self, state_b: Array) -> Array:
         """Assemble (n_blocks, rho+2, rho+2) tiles with Moore halos.

@@ -182,7 +182,8 @@ class DistributedSqueezeEngine:
                                      strips, local_ids)
             return _tile_step(layout, state_local, halo)
 
-        step = jax.shard_map(
+        from repro.utils.jax_compat import shard_map
+        step = shard_map(
             local_step, mesh=self.mesh,
             in_specs=P(self.axis, None, None),
             out_specs=P(self.axis, None, None))

@@ -9,9 +9,14 @@ Sections 3.2-3.5).
     The static block-neighbor table (built once with the maps; see
     DESIGN.md Section 2 for the TPU-native restructure) turns the step
     into halo-gather + dense in-tile stencil.
+  * ``SqueezePallasEngine`` — the block engine with its step fused into
+    one of the Pallas kernels (kernels/squeeze_stencil.py).
 
-Both produce states convertible to the same expanded embedding as the
-baselines (tests assert step-for-step equivalence).
+Every engine is parameterized by a ``StencilWorkload`` (default: the
+paper's game of life); multi-channel workloads carry a leading channel
+axis (cell state (C, rows, cols); block state (C, n_blocks, rho, rho)).
+All engines produce states convertible to the same expanded embedding as
+the baselines (tests assert step-for-step equivalence).
 """
 from __future__ import annotations
 
@@ -22,10 +27,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import maps
-from repro.core.baselines import BBEngine, life_rule, _moore_counts
+from repro.core.baselines import (BBEngine, _moore_counts,  # noqa: F401
+                                  life_rule)
 from repro.core.compact import (BlockLayout, MOORE_DIRS, compact_meshgrid,
                                 compact_to_expanded, expanded_to_compact)
 from repro.core.fractals import NBBFractal
+from repro.workloads.base import (StencilWorkload, check_workload_ndim,
+                                  weighted_gather_agg, weighted_moore_agg)
+from repro.workloads.rules import LIFE
 
 Array = jnp.ndarray
 
@@ -36,9 +45,14 @@ class SqueezeCellEngine:
 
     frac: NBBFractal
     r: int
+    workload: StencilWorkload = LIFE
+
+    def __post_init__(self):
+        check_workload_ndim(self.workload, 2)
 
     def init_random(self, seed: int) -> Array:
-        expanded = BBEngine(self.frac, self.r).init_random(seed)
+        expanded = BBEngine(self.frac, self.r,
+                            self.workload).init_random(seed)
         return expanded_to_compact(self.frac, self.r, expanded)
 
     def to_expanded(self, state: Array) -> Array:
@@ -46,24 +60,29 @@ class SqueezeCellEngine:
 
     @partial(jax.jit, static_argnums=0)
     def step(self, state: Array) -> Array:
-        frac, r = self.frac, self.r
+        frac, r, wl = self.frac, self.r, self.workload
         cx, cy = compact_meshgrid(frac, r)
         # 1 lambda per cell: where am I in (virtual) expanded space?
         ex, ey = maps.lambda_map(frac, r, cx, cy)
-        count = jnp.zeros(state.shape, jnp.int32)
-        for dx, dy in MOORE_DIRS:
+
+        def gather(d):
             # 1 nu (+ membership, fused — same digit pass) per neighbor
-            nx, ny, valid = maps.nu_with_membership(frac, r, ex + dx, ey + dy)
-            val = state[ny, nx].astype(jnp.int32)
-            count = count + jnp.where(valid, val, 0)
-        return life_rule(state, count)
+            nx, ny, valid = maps.nu_with_membership(
+                frac, r, ex + d[0], ey + d[1])
+            return jnp.where(valid, state[..., ny, nx],
+                             jnp.zeros((), state.dtype))
+
+        agg = weighted_gather_agg(MOORE_DIRS, wl.weights2d, gather,
+                                  state.shape[:-2] + ex.shape, wl.agg_dtype)
+        # every compact cell is a fractal cell: no mask
+        return wl.apply(state, agg, None).astype(state.dtype)
 
     def run(self, state: Array, steps: int) -> Array:
         return jax.lax.fori_loop(0, steps, lambda _, s: self.step(s), state)
 
     def memory_bytes(self, dtype_size: int = 1) -> int:
         rows, cols = self.frac.compact_dims(self.r)
-        return rows * cols * dtype_size
+        return self.workload.n_channels * rows * cols * dtype_size
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,8 +90,10 @@ class SqueezeBlockEngine:
     """Block-level Squeeze (paper Section 3.5) with a static neighbor table."""
 
     layout: BlockLayout
+    workload: StencilWorkload = LIFE
 
     def __post_init__(self):
+        check_workload_ndim(self.workload, 2)
         self.layout.materialize()
 
     @property
@@ -84,7 +105,8 @@ class SqueezeBlockEngine:
         return self.layout.r
 
     def init_random(self, seed: int) -> Array:
-        expanded = BBEngine(self.frac, self.r).init_random(seed)
+        expanded = BBEngine(self.frac, self.r,
+                            self.workload).init_random(seed)
         return self.layout.from_expanded(expanded)
 
     def to_expanded(self, state: Array) -> Array:
@@ -92,28 +114,92 @@ class SqueezeBlockEngine:
 
     @partial(jax.jit, static_argnums=0)
     def step(self, state: Array) -> Array:
-        padded = self.layout.pad_with_halo(state)  # (nb, rho+2, rho+2)
-        counts = jax.vmap(_moore_counts)(padded)
-        nxt = life_rule(state, counts)
-        mask = jnp.asarray(self.layout.micro_mask)[None]
-        return nxt * mask
+        wl = self.workload
+        pad = self.layout.pad_with_halo
+        if wl.n_channels > 1:
+            pad = jax.vmap(pad)  # over the leading channel axis
+        padded = pad(state)  # (C?, nb, rho+2, rho+2)
+        agg = weighted_moore_agg(padded, wl.weights2d, wl.agg_dtype)
+        mask = jnp.asarray(self.layout.micro_mask)  # broadcasts over C?, nb
+        return wl.apply(state, agg, mask).astype(state.dtype)
 
     def run(self, state: Array, steps: int) -> Array:
         return jax.lax.fori_loop(0, steps, lambda _, s: self.step(s), state)
 
     def memory_bytes(self, dtype_size: int = 1) -> int:
-        return self.layout.memory_bytes(dtype_size)
+        return self.workload.n_channels * self.layout.memory_bytes(dtype_size)
 
 
-def make_engine(kind: str, frac: NBBFractal, r: int, m: int = 0):
-    """Engine factory: kind in {'bb', 'lambda', 'cell', 'block'}."""
+@dataclasses.dataclass(frozen=True)
+class SqueezePallasEngine:
+    """Block-level Squeeze with the step fused into a Pallas kernel.
+
+    ``variant`` selects the halo strategy of kernels/squeeze_stencil.py:
+    'blocks' (v1, paper-shaped), 'strips' (v2, pre-gathered strip halos) or
+    'fused' (v3, in-kernel strip reads). State layout and conversions are
+    identical to ``SqueezeBlockEngine``.
+    """
+
+    layout: BlockLayout
+    workload: StencilWorkload = LIFE
+    variant: str = "strips"
+
+    def __post_init__(self):
+        if self.variant not in ("blocks", "strips", "fused"):
+            raise ValueError(f"unknown Pallas variant {self.variant!r}")
+        check_workload_ndim(self.workload, 2)
+        self.layout.materialize()
+
+    @property
+    def frac(self) -> NBBFractal:
+        return self.layout.frac
+
+    @property
+    def r(self) -> int:
+        return self.layout.r
+
+    def init_random(self, seed: int) -> Array:
+        return SqueezeBlockEngine(self.layout,
+                                  self.workload).init_random(seed)
+
+    def to_expanded(self, state: Array) -> Array:
+        return self.layout.to_expanded(state)
+
+    def step(self, state: Array) -> Array:
+        from repro.kernels import ops
+        fn = {"blocks": ops.stencil_step_blocks,
+              "strips": ops.stencil_step_strips,
+              "fused": ops.stencil_step_fused}[self.variant]
+        return fn(self.layout, state, self.workload)
+
+    def run(self, state: Array, steps: int) -> Array:
+        step = self.step
+        return jax.lax.fori_loop(0, steps, lambda _, s: step(s), state)
+
+    def memory_bytes(self, dtype_size: int = 1) -> int:
+        return self.workload.n_channels * self.layout.memory_bytes(dtype_size)
+
+
+def make_engine(kind: str, frac: NBBFractal, r: int, m: int = 0,
+                workload: StencilWorkload = LIFE):
+    """Engine factory.
+
+    kind: 'bb' | 'lambda' | 'cell' | 'block' | 'pallas-blocks' |
+          'pallas-strips' | 'pallas-fused' ('pallas' = 'pallas-strips').
+    ``m`` (block level, rho = s**m) only applies to the block/pallas kinds.
+    """
     from repro.core.baselines import LambdaEngine
     if kind == "bb":
-        return BBEngine(frac, r)
+        return BBEngine(frac, r, workload)
     if kind == "lambda":
-        return LambdaEngine(frac, r)
+        return LambdaEngine(frac, r, workload)
     if kind == "cell":
-        return SqueezeCellEngine(frac, r)
+        return SqueezeCellEngine(frac, r, workload)
     if kind == "block":
-        return SqueezeBlockEngine(BlockLayout(frac, r, m))
+        return SqueezeBlockEngine(BlockLayout(frac, r, m), workload)
+    if kind == "pallas":
+        kind = "pallas-strips"
+    if kind.startswith("pallas-"):
+        return SqueezePallasEngine(BlockLayout(frac, r, m), workload,
+                                   variant=kind[len("pallas-"):])
     raise ValueError(f"unknown engine kind {kind!r}")

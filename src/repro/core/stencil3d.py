@@ -1,9 +1,12 @@
-"""3D compact stencil engines: the paper's game-of-life case study lifted
-to 3D NBB fractals (Menger sponge etc.) using the lambda3/nu3 maps —
-completing the §5 "extend to 3D" future work into a runnable simulator.
+"""3D compact stencil engines: the paper's case study lifted to 3D NBB
+fractals (Menger sponge etc.) using the lambda3/nu3 maps — completing the
+§5 "extend to 3D" future work into a runnable simulator.
 
-Rule: 3D life B6/S5-7 (a common 26-neighbor Moore variant); holes and
-out-of-bounds never count, exactly like the 2D adaptation in §4.
+Parameterized by a single-channel ``StencilWorkload`` over the 26-cell
+Moore neighborhood; the default is 3D life B6/S5-7 (``LIFE3D``), and
+``HEAT3D`` runs the Jacobi heat workload on the 6 orthogonal neighbors.
+Holes and out-of-bounds never contribute, exactly like the 2D adaptation
+in §4.
 """
 from __future__ import annotations
 
@@ -16,6 +19,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fractals3d as f3
+from repro.workloads.base import (StencilWorkload, check_workload_ndim,
+                                  weighted_gather_agg)
+from repro.workloads.rules import LIFE3D
 
 Array = jnp.ndarray
 
@@ -24,9 +30,20 @@ MOORE3: Tuple[Tuple[int, int, int], ...] = tuple(
 
 
 def life3_rule(alive: Array, neighbors: Array) -> Array:
+    """3D life B6/S5-7 (kept as a function for the original call sites)."""
     born = (neighbors == 6)
     survive = (alive > 0) & (neighbors >= 5) & (neighbors <= 7)
     return (born | survive).astype(jnp.uint8)
+
+
+def _check_workload(workload: StencilWorkload):
+    if workload.n_channels != 1:
+        raise ValueError("3D engines support single-channel workloads only")
+    check_workload_ndim(workload, 3)
+
+
+def _weights3(workload: StencilWorkload):
+    return tuple(workload.weight(d) for d in MOORE3)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,24 +52,32 @@ class BB3DEngine:
 
     frac: f3.NBBFractal3D
     r: int
+    workload: StencilWorkload = LIFE3D
+
+    def __post_init__(self):
+        _check_workload(self.workload)
 
     def init_random(self, seed: int) -> Array:
         n = self.frac.side(self.r)
         mask = jnp.asarray(self.frac.mask(self.r))
-        bits = jax.random.bernoulli(jax.random.PRNGKey(seed), 0.5,
-                                    (n, n, n))
-        return (bits & (mask > 0)).astype(jnp.uint8)
+        field = self.workload.init(jax.random.PRNGKey(seed), (n, n, n))
+        return field * mask.astype(field.dtype)
 
     @partial(jax.jit, static_argnums=0)
     def step(self, state: Array) -> Array:
+        wl = self.workload
         mask = jnp.asarray(self.frac.mask(self.r))
         padded = jnp.pad(state, 1)
         n = state.shape[0]
-        counts = jnp.zeros_like(state, jnp.int32)
-        for dx, dy, dz in MOORE3:
-            counts = counts + padded[1 + dz:n + 1 + dz, 1 + dy:n + 1 + dy,
-                                     1 + dx:n + 1 + dx].astype(jnp.int32)
-        return life3_rule(state, counts) * mask
+        agg = weighted_gather_agg(
+            MOORE3, _weights3(wl),
+            lambda d: padded[1 + d[2]:n + 1 + d[2], 1 + d[1]:n + 1 + d[1],
+                             1 + d[0]:n + 1 + d[0]],
+            state.shape, wl.agg_dtype)
+        return wl.apply(state, agg, mask).astype(state.dtype)
+
+    def run(self, state: Array, steps: int) -> Array:
+        return jax.lax.fori_loop(0, steps, lambda _, s: self.step(s), state)
 
     def memory_bytes(self) -> int:
         return self.frac.side(self.r) ** 3
@@ -64,6 +89,10 @@ class Squeeze3DEngine:
 
     frac: f3.NBBFractal3D
     r: int
+    workload: StencilWorkload = LIFE3D
+
+    def __post_init__(self):
+        _check_workload(self.workload)
 
     def _compact_grid(self):
         nx, ny, nz = self.frac.compact_dims(self.r)
@@ -74,7 +103,8 @@ class Squeeze3DEngine:
         return cx, cy, cz
 
     def init_random(self, seed: int) -> Array:
-        expanded = BB3DEngine(self.frac, self.r).init_random(seed)
+        expanded = BB3DEngine(self.frac, self.r,
+                              self.workload).init_random(seed)
         cx, cy, cz = self._compact_grid()
         ex, ey, ez = f3.lambda3_map(self.frac, self.r, cx, cy, cz)
         return expanded[ez, ey, ex]
@@ -88,17 +118,20 @@ class Squeeze3DEngine:
 
     @partial(jax.jit, static_argnums=0)
     def step(self, state: Array) -> Array:
-        frac, r = self.frac, self.r
+        frac, r, wl = self.frac, self.r, self.workload
         cx, cy, cz = self._compact_grid()
         ex, ey, ez = f3.lambda3_map(frac, r, cx, cy, cz)
-        counts = jnp.zeros(state.shape, jnp.int32)
-        for dx, dy, dz in MOORE3:
-            nx_, ny_, nz_ = ex + dx, ey + dy, ez + dz
+
+        def gather(d):
+            nx_, ny_, nz_ = ex + d[0], ey + d[1], ez + d[2]
             valid = f3.is_fractal3(frac, r, nx_, ny_, nz_)
             bx, by, bz = f3.nu3_map(frac, r, nx_, ny_, nz_)
-            val = state[bz, by, bx].astype(jnp.int32)
-            counts = counts + jnp.where(valid, val, 0)
-        return life3_rule(state, counts)
+            return jnp.where(valid, state[bz, by, bx],
+                             jnp.zeros((), state.dtype))
+
+        agg = weighted_gather_agg(MOORE3, _weights3(wl), gather,
+                                  state.shape, wl.agg_dtype)
+        return wl.apply(state, agg, None).astype(state.dtype)
 
     def run(self, state: Array, steps: int) -> Array:
         return jax.lax.fori_loop(0, steps, lambda _, s: self.step(s), state)

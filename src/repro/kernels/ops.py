@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.core.compact import BlockLayout
 from repro.core.fractals import NBBFractal
+from repro.workloads.rules import LIFE
 from repro.kernels import attention as _attention
 from repro.kernels import lambda_map as _lambda
 from repro.kernels import nu_map as _nu
@@ -38,6 +39,33 @@ def lambda_map_tc(frac: NBBFractal, r: int, cx, cy, *,
     if interpret is None:
         interpret = default_interpret()
     return _lambda.lambda_map_pallas(frac, r, cx, cy, interpret=interpret)
+
+
+def stencil_step_blocks(layout: BlockLayout, state, workload=LIFE, *,
+                        interpret: Optional[bool] = None):
+    """Fused block-level workload step, v1 (neighbor-block staging)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _stencil.stencil_step_blocks(layout, state, workload,
+                                        interpret=interpret)
+
+
+def stencil_step_strips(layout: BlockLayout, state, workload=LIFE, *,
+                        interpret: Optional[bool] = None):
+    """Fused block-level workload step, v2 (strip halos)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _stencil.stencil_step_strips(layout, state, workload,
+                                        interpret=interpret)
+
+
+def stencil_step_fused(layout: BlockLayout, state, workload=LIFE, *,
+                       interpret: Optional[bool] = None):
+    """Fused block-level workload step, v3 (in-kernel strip reads)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _stencil.stencil_step_fused(layout, state, workload,
+                                       interpret=interpret)
 
 
 def life_step_blocks(layout: BlockLayout, state, *,
@@ -89,5 +117,6 @@ def flash_attention(q, k, v, *, causal: bool = True,
 
 
 __all__ = ["nu_map_tc", "lambda_map_tc", "life_step_blocks",
-           "life_step_strips", "life_step_fused", "flash_attention",
+           "life_step_strips", "life_step_fused", "stencil_step_blocks",
+           "stencil_step_strips", "stencil_step_fused", "flash_attention",
            "ssd_chunk_scan", "default_interpret"]

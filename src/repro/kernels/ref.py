@@ -31,11 +31,17 @@ def lambda_ref(frac: NBBFractal, r: int, cx: Array, cy: Array
 
 def life_blocks_ref(layout: BlockLayout, state: Array) -> Array:
     """Oracle for the fused block-level game-of-life step kernels."""
-    import jax
     padded = layout.pad_with_halo(state)
-    counts = jax.vmap(_moore_counts)(padded)
+    counts = _moore_counts(padded)
     nxt = life_rule(state, counts)
     return nxt * jnp.asarray(layout.micro_mask)[None]
+
+
+def stencil_blocks_ref(layout: BlockLayout, state: Array, workload) -> Array:
+    """Oracle for the workload-parameterized block-level step kernels:
+    the plain-jnp SqueezeBlockEngine step."""
+    from repro.core.stencil import SqueezeBlockEngine
+    return SqueezeBlockEngine(layout, workload).step(state)
 
 
 def ssd_ref(x: Array, dt: Array, a: Array, bm: Array, cm: Array,

@@ -1,20 +1,29 @@
-"""Fused block-level Squeeze stencil kernels (game of life on a compact NBB
-fractal), paper Sections 3.5 + 4 adapted to TPU.
+"""Fused block-level Squeeze stencil kernels on a compact NBB fractal,
+paper Sections 3.5 + 4 adapted to TPU.
 
-Two variants, both driven by the static block-neighbor table built from the
-paper's lambda/nu maps (compact.BlockLayout.neighbor_table):
+Three variants, all driven by the static block-neighbor table built from
+the paper's lambda/nu maps (compact.BlockLayout.neighbor_table), and all
+parameterized by a ``StencilWorkload`` whose ``tile_rule`` supplies the
+traced in-tile update (the halo plumbing below is rule-agnostic):
 
-  * ``life_step_blocks``  (v1, paper-shaped): the Pallas grid walks compact
-    blocks; the 8 Moore neighbor *blocks* are brought into VMEM through
-    scalar-prefetch-dependent BlockSpec index maps (the TPU analogue of the
-    paper's per-block shared-memory staging). Read amplification ~9x.
+  * ``stencil_step_blocks``  (v1, paper-shaped): the Pallas grid walks
+    compact blocks; the 8 Moore neighbor *blocks* are brought into VMEM
+    through scalar-prefetch-dependent BlockSpec index maps (the TPU
+    analogue of the paper's per-block shared-memory staging). Read
+    amplification ~9x.
 
-  * ``life_step_strips``  (v2, beyond-paper): the halo strips (2 rows,
-    2 cols incl. corners) are pre-gathered by XLA into a (nb, 4, rho+2)
+  * ``stencil_step_strips``  (v2, beyond-paper): the halo strips (2 rows,
+    2 cols incl. corners) are pre-gathered by XLA into a (C, nb, 4, rho+2)
     array; the kernel reads center + strips only, cutting HBM traffic from
     ~9 rho^2 to ~rho^2 + 4 rho per block. See EXPERIMENTS.md §Perf.
 
-Cell state is uint8; arithmetic runs int32 in-register.
+  * ``stencil_step_fused``   (v3): strip reads fused into the kernel via
+    scalar-prefetch index maps — no materialized halo array.
+
+Public state is (nb, rho, rho) for single-channel workloads and
+(C, nb, rho, rho) for multi-channel ones (e.g. Gray-Scott); the kernels
+always run with an explicit channel axis internally. The ``life_step_*``
+wrappers keep the original game-of-life entry points.
 """
 from __future__ import annotations
 
@@ -26,208 +35,256 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.compact import BlockLayout
+from repro.workloads.base import StencilWorkload
+from repro.workloads.rules import LIFE
 
 
-def _life_rule_tile(center: jnp.ndarray, padded: jnp.ndarray,
-                    mask: jnp.ndarray) -> jnp.ndarray:
-    """B3/S23 on one (rho+2, rho+2)-padded tile; returns uint8 (rho, rho)."""
-    rho = center.shape[0]
-    counts = jnp.zeros((rho, rho), jnp.int32)
-    for dy in (-1, 0, 1):
-        for dx in (-1, 0, 1):
-            if dx == 0 and dy == 0:
-                continue
-            counts = counts + padded[1 + dy:rho + 1 + dy,
-                                     1 + dx:rho + 1 + dx]
-    born = counts == 3
-    survive = (center > 0) & (counts == 2)
-    return ((born | survive) & mask).astype(jnp.uint8)
+def _with_channels(workload: StencilWorkload, state: jnp.ndarray):
+    """Canonicalize to (C, nb, rho, rho); returns (state_c, had_channels)."""
+    if workload.n_channels > 1:
+        return state, True
+    return state[None], False
+
+
+def _tile_update(workload: StencilWorkload, c, padded, mask):
+    """Run the workload's tile rule on one (C, rho, rho) tile. The rule's
+    ``apply`` sees the channel axis only for multi-channel workloads."""
+    if workload.n_channels > 1:
+        return workload.tile_rule(c, padded, mask)
+    return workload.tile_rule(c[0], padded[0], mask)[None]
 
 
 # ======================================================================
 # v1: neighbor blocks via scalar-prefetch index maps
 # ======================================================================
-def _blocks_kernel(tbl_ref, c_ref, nw, n_, ne, w_, e_, sw, s_, se, mask_ref,
-                   out_ref):
+def _blocks_kernel(workload, tbl_ref, c_ref, nw, n_, ne, w_, e_, sw, s_, se,
+                   mask_ref, out_ref):
     del tbl_ref
-    rho = c_ref.shape[1]
-    c = c_ref[0].astype(jnp.int32)
-    padded = jnp.zeros((rho + 2, rho + 2), jnp.int32)
-    padded = padded.at[1:-1, 1:-1].set(c)
-    padded = padded.at[0, 0].set(nw[0, -1, -1].astype(jnp.int32))
-    padded = padded.at[0, 1:-1].set(n_[0, -1, :].astype(jnp.int32))
-    padded = padded.at[0, -1].set(ne[0, -1, 0].astype(jnp.int32))
-    padded = padded.at[1:-1, 0].set(w_[0, :, -1].astype(jnp.int32))
-    padded = padded.at[1:-1, -1].set(e_[0, :, 0].astype(jnp.int32))
-    padded = padded.at[-1, 0].set(sw[0, 0, -1].astype(jnp.int32))
-    padded = padded.at[-1, 1:-1].set(s_[0, 0, :].astype(jnp.int32))
-    padded = padded.at[-1, -1].set(se[0, 0, 0].astype(jnp.int32))
-    out_ref[0] = _life_rule_tile(c, padded, mask_ref[...] > 0)
+    rho = c_ref.shape[-1]
+    c = c_ref[:, 0]                          # (C, rho, rho)
+    padded = jnp.zeros(c.shape[:-2] + (rho + 2, rho + 2), c.dtype)
+    padded = padded.at[..., 1:-1, 1:-1].set(c)
+    padded = padded.at[..., 0, 0].set(nw[:, 0, -1, -1])
+    padded = padded.at[..., 0, 1:-1].set(n_[:, 0, -1, :])
+    padded = padded.at[..., 0, -1].set(ne[:, 0, -1, 0])
+    padded = padded.at[..., 1:-1, 0].set(w_[:, 0, :, -1])
+    padded = padded.at[..., 1:-1, -1].set(e_[:, 0, :, 0])
+    padded = padded.at[..., -1, 0].set(sw[:, 0, 0, -1])
+    padded = padded.at[..., -1, 1:-1].set(s_[:, 0, 0, :])
+    padded = padded.at[..., -1, -1].set(se[:, 0, 0, 0])
+    nxt = _tile_update(workload, c, padded, mask_ref[...])
+    out_ref[:, 0] = nxt.astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("layout", "interpret"))
-def life_step_blocks(layout: BlockLayout, state: jnp.ndarray, *,
-                     interpret: bool = True) -> jnp.ndarray:
-    """One GoL step; state (n_blocks, rho, rho) uint8 -> same."""
+def stencil_step_blocks(layout: BlockLayout, state: jnp.ndarray,
+                        workload: StencilWorkload = LIFE, *,
+                        interpret: bool = True) -> jnp.ndarray:
+    """One workload step; state (C?, n_blocks, rho, rho) -> same."""
+    layout.materialize()  # static tables must be built outside the trace
+    return _stencil_step_blocks(layout, state, workload, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("layout", "workload", "interpret"))
+def _stencil_step_blocks(layout: BlockLayout, state: jnp.ndarray,
+                         workload: StencilWorkload = LIFE, *,
+                         interpret: bool = True) -> jnp.ndarray:
     rho, nb = layout.rho, layout.n_blocks
+    s, chan = _with_channels(workload, state)
+    nc = s.shape[0]
     padded_src = jnp.concatenate(
-        [state, jnp.zeros((1, rho, rho), state.dtype)], axis=0)
+        [s, jnp.zeros((nc, 1, rho, rho), s.dtype)], axis=1)
     table = jnp.asarray(layout.neighbor_table)  # (nb, 8), ghost = nb
 
     def center_idx(i, tbl):
         del tbl
-        return (i, 0, 0)
+        return (0, i, 0, 0)
 
     def nbr_idx(d):
         def idx(i, tbl):
-            return (tbl[i, d], 0, 0)
+            return (0, tbl[i, d], 0, 0)
         return idx
 
-    blk = pl.BlockSpec((1, rho, rho), center_idx)
-    in_specs = ([blk] + [pl.BlockSpec((1, rho, rho), nbr_idx(d))
+    blk = pl.BlockSpec((nc, 1, rho, rho), center_idx)
+    in_specs = ([blk] + [pl.BlockSpec((nc, 1, rho, rho), nbr_idx(d))
                          for d in range(8)]
                 + [pl.BlockSpec((rho, rho), lambda i, tbl: (0, 0))])
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nb,),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, rho, rho), center_idx),
+        out_specs=pl.BlockSpec((nc, 1, rho, rho), center_idx),
     )
-    return pl.pallas_call(
-        _blocks_kernel,
+    out = pl.pallas_call(
+        functools.partial(_blocks_kernel, workload),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((nb, rho, rho), jnp.uint8),
+        out_shape=jax.ShapeDtypeStruct((nc, nb, rho, rho), workload.dtype),
         interpret=interpret,
     )(table, *([padded_src] * 9), jnp.asarray(layout.micro_mask))
+    return out if chan else out[0]
 
 
 # ======================================================================
 # v2: pre-gathered halo strips (beyond-paper traffic optimization)
 # ======================================================================
-def _strips_kernel(c_ref, halo_ref, mask_ref, out_ref):
-    rho = c_ref.shape[1]
-    c = c_ref[0].astype(jnp.int32)
-    halo = halo_ref[0].astype(jnp.int32)  # (4, rho+2)
-    padded = jnp.zeros((rho + 2, rho + 2), jnp.int32)
-    padded = padded.at[1:-1, 1:-1].set(c)
-    padded = padded.at[0, :].set(halo[0])        # top row incl corners
-    padded = padded.at[-1, :].set(halo[1])       # bottom row incl corners
-    padded = padded.at[1:-1, 0].set(halo[2, :rho])   # west col
-    padded = padded.at[1:-1, -1].set(halo[3, :rho])  # east col
-    out_ref[0] = _life_rule_tile(c, padded, mask_ref[...] > 0)
+def _strips_kernel(workload, c_ref, halo_ref, mask_ref, out_ref):
+    rho = c_ref.shape[-1]
+    c = c_ref[:, 0]                          # (C, rho, rho)
+    halo = halo_ref[:, 0]                    # (C, 4, rho+2)
+    padded = jnp.zeros(c.shape[:-2] + (rho + 2, rho + 2), c.dtype)
+    padded = padded.at[..., 1:-1, 1:-1].set(c)
+    padded = padded.at[..., 0, :].set(halo[:, 0])        # top row + corners
+    padded = padded.at[..., -1, :].set(halo[:, 1])       # bottom row + corners
+    padded = padded.at[..., 1:-1, 0].set(halo[:, 2, :rho])   # west col
+    padded = padded.at[..., 1:-1, -1].set(halo[:, 3, :rho])  # east col
+    nxt = _tile_update(workload, c, padded, mask_ref[...])
+    out_ref[:, 0] = nxt.astype(out_ref.dtype)
 
 
-def gather_halo_strips(layout: BlockLayout, state: jnp.ndarray) -> jnp.ndarray:
-    """(nb, 4, rho+2) halo strips via strip-level XLA gathers.
+def _gather_halo_strips(layout: BlockLayout, s: jnp.ndarray) -> jnp.ndarray:
+    """(C, nb, 4, rho+2) halo strips via strip-level XLA gathers.
 
     Only edge rows/cols of the neighbor blocks are touched (~4 rho per block
     instead of 8 rho^2), which is the v2 traffic win.
     """
-    rho, nb = layout.rho, layout.n_blocks
+    rho = layout.rho
+    nc = s.shape[0]
     table = jnp.asarray(layout.neighbor_table)
-    z_row = jnp.zeros((1, rho), state.dtype)
-    z_cell = jnp.zeros((1,), state.dtype)
+    z_row = jnp.zeros((nc, 1, rho), s.dtype)
+    z_cell = jnp.zeros((nc, 1), s.dtype)
 
-    bottom = jnp.concatenate([state[:, -1, :], z_row], 0)   # (nb+1, rho)
-    top = jnp.concatenate([state[:, 0, :], z_row], 0)
-    east = jnp.concatenate([state[:, :, -1], z_row], 0)
-    west = jnp.concatenate([state[:, :, 0], z_row], 0)
-    se_c = jnp.concatenate([state[:, -1, -1], z_cell], 0)   # (nb+1,)
-    sw_c = jnp.concatenate([state[:, -1, 0], z_cell], 0)
-    ne_c = jnp.concatenate([state[:, 0, -1], z_cell], 0)
-    nw_c = jnp.concatenate([state[:, 0, 0], z_cell], 0)
+    bottom = jnp.concatenate([s[:, :, -1, :], z_row], 1)   # (C, nb+1, rho)
+    top = jnp.concatenate([s[:, :, 0, :], z_row], 1)
+    east = jnp.concatenate([s[:, :, :, -1], z_row], 1)
+    west = jnp.concatenate([s[:, :, :, 0], z_row], 1)
+    se_c = jnp.concatenate([s[:, :, -1, -1], z_cell], 1)   # (C, nb+1)
+    sw_c = jnp.concatenate([s[:, :, -1, 0], z_cell], 1)
+    ne_c = jnp.concatenate([s[:, :, 0, -1], z_cell], 1)
+    nw_c = jnp.concatenate([s[:, :, 0, 0], z_cell], 1)
 
     # MOORE_DIRS order: NW, N, NE, W, E, SW, S, SE
     row_top = jnp.concatenate([
-        se_c[table[:, 0]][:, None],          # my NW corner = NW nbr's SE cell
-        bottom[table[:, 1]],                 # N nbr's bottom row
-        sw_c[table[:, 2]][:, None],          # NE nbr's SW cell
-    ], axis=1)                               # (nb, rho+2)
+        se_c[:, table[:, 0], None],          # my NW corner = NW nbr's SE cell
+        bottom[:, table[:, 1]],              # N nbr's bottom row
+        sw_c[:, table[:, 2], None],          # NE nbr's SW cell
+    ], axis=2)                               # (C, nb, rho+2)
     row_bot = jnp.concatenate([
-        ne_c[table[:, 5]][:, None],          # SW nbr's NE cell
-        top[table[:, 6]],                    # S nbr's top row
-        nw_c[table[:, 7]][:, None],          # SE nbr's NW cell
-    ], axis=1)
-    col_w = jnp.pad(east[table[:, 3]], ((0, 0), (0, 2)))    # W nbr's east col
-    col_e = jnp.pad(west[table[:, 4]], ((0, 0), (0, 2)))    # E nbr's west col
-    return jnp.stack([row_top, row_bot, col_w, col_e], axis=1)
+        ne_c[:, table[:, 5], None],          # SW nbr's NE cell
+        top[:, table[:, 6]],                 # S nbr's top row
+        nw_c[:, table[:, 7], None],          # SE nbr's NW cell
+    ], axis=2)
+    col_w = jnp.pad(east[:, table[:, 3]],
+                    ((0, 0), (0, 0), (0, 2)))    # W nbr's east col
+    col_e = jnp.pad(west[:, table[:, 4]],
+                    ((0, 0), (0, 0), (0, 2)))    # E nbr's west col
+    return jnp.stack([row_top, row_bot, col_w, col_e], axis=2)
 
 
-@functools.partial(jax.jit, static_argnames=("layout", "interpret"))
-def life_step_strips(layout: BlockLayout, state: jnp.ndarray, *,
-                     interpret: bool = True) -> jnp.ndarray:
-    """One GoL step, v2 (strip halos); state (n_blocks, rho, rho) uint8."""
+def gather_halo_strips(layout: BlockLayout, state: jnp.ndarray) -> jnp.ndarray:
+    """Single-channel legacy entry point: (nb, rho, rho) -> (nb, 4, rho+2)."""
+    return _gather_halo_strips(layout, state[None])[0]
+
+
+def stencil_step_strips(layout: BlockLayout, state: jnp.ndarray,
+                        workload: StencilWorkload = LIFE, *,
+                        interpret: bool = True) -> jnp.ndarray:
+    """One workload step, v2 (strip halos); state (C?, n_blocks, rho, rho)."""
+    layout.materialize()  # static tables must be built outside the trace
+    return _stencil_step_strips(layout, state, workload, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("layout", "workload", "interpret"))
+def _stencil_step_strips(layout: BlockLayout, state: jnp.ndarray,
+                         workload: StencilWorkload = LIFE, *,
+                         interpret: bool = True) -> jnp.ndarray:
     rho, nb = layout.rho, layout.n_blocks
-    halo = gather_halo_strips(layout, state)
-    return pl.pallas_call(
-        _strips_kernel,
+    s, chan = _with_channels(workload, state)
+    nc = s.shape[0]
+    halo = _gather_halo_strips(layout, s)
+    out = pl.pallas_call(
+        functools.partial(_strips_kernel, workload),
         grid=(nb,),
-        in_specs=[pl.BlockSpec((1, rho, rho), lambda i: (i, 0, 0)),
-                  pl.BlockSpec((1, 4, rho + 2), lambda i: (i, 0, 0)),
+        in_specs=[pl.BlockSpec((nc, 1, rho, rho), lambda i: (0, i, 0, 0)),
+                  pl.BlockSpec((nc, 1, 4, rho + 2), lambda i: (0, i, 0, 0)),
                   pl.BlockSpec((rho, rho), lambda i: (0, 0))],
-        out_specs=pl.BlockSpec((1, rho, rho), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((nb, rho, rho), jnp.uint8),
+        out_specs=pl.BlockSpec((nc, 1, rho, rho), lambda i: (0, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nc, nb, rho, rho), workload.dtype),
         interpret=interpret,
-    )(state, halo, jnp.asarray(layout.micro_mask))
+    )(s, halo, jnp.asarray(layout.micro_mask))
+    return out if chan else out[0]
 
 
 # ======================================================================
 # v3: strip reads fused into the kernel (scalar-prefetch index maps) —
-# no materialized (nb, 4, rho+2) halo array (EXPERIMENTS.md §Perf)
+# no materialized (C, nb, 4, rho+2) halo array (EXPERIMENTS.md §Perf)
 # ======================================================================
-def _fused_kernel(tbl_ref, c_ref, top, bot, west, east,
+def _fused_kernel(workload, tbl_ref, c_ref, top, bot, west, east,
                   c_nw, c_ne, c_sw, c_se, mask_ref, out_ref):
     del tbl_ref
-    rho = c_ref.shape[1]
-    c = c_ref[0].astype(jnp.int32)
-    padded = jnp.zeros((rho + 2, rho + 2), jnp.int32)
-    padded = padded.at[1:-1, 1:-1].set(c)
+    rho = c_ref.shape[-1]
+    c = c_ref[:, 0]                          # (C, rho, rho)
+    padded = jnp.zeros(c.shape[:-2] + (rho + 2, rho + 2), c.dtype)
+    padded = padded.at[..., 1:-1, 1:-1].set(c)
     # neighbor strips (each ref already indexed at the right block)
-    padded = padded.at[0, 1:-1].set(bot[0].astype(jnp.int32))   # N's bottom
-    padded = padded.at[-1, 1:-1].set(top[0].astype(jnp.int32))  # S's top
-    padded = padded.at[1:-1, 0].set(east[0].astype(jnp.int32))  # W's east
-    padded = padded.at[1:-1, -1].set(west[0].astype(jnp.int32))  # E's west
-    padded = padded.at[0, 0].set(c_nw[0, 0].astype(jnp.int32))
-    padded = padded.at[0, -1].set(c_ne[0, 0].astype(jnp.int32))
-    padded = padded.at[-1, 0].set(c_sw[0, 0].astype(jnp.int32))
-    padded = padded.at[-1, -1].set(c_se[0, 0].astype(jnp.int32))
-    out_ref[0] = _life_rule_tile(c, padded, mask_ref[...] > 0)
+    padded = padded.at[..., 0, 1:-1].set(bot[:, 0])      # N's bottom
+    padded = padded.at[..., -1, 1:-1].set(top[:, 0])     # S's top
+    padded = padded.at[..., 1:-1, 0].set(east[:, 0])     # W's east
+    padded = padded.at[..., 1:-1, -1].set(west[:, 0])    # E's west
+    padded = padded.at[..., 0, 0].set(c_nw[:, 0, 0])
+    padded = padded.at[..., 0, -1].set(c_ne[:, 0, 0])
+    padded = padded.at[..., -1, 0].set(c_sw[:, 0, 0])
+    padded = padded.at[..., -1, -1].set(c_se[:, 0, 0])
+    nxt = _tile_update(workload, c, padded, mask_ref[...])
+    out_ref[:, 0] = nxt.astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("layout", "interpret"))
-def life_step_fused(layout: BlockLayout, state: jnp.ndarray, *,
-                    interpret: bool = True) -> jnp.ndarray:
-    """One GoL step, v3: per-direction strip/corner arrays are built with
-    contiguous XLA slices and the kernel reads the neighbor's strip
+def stencil_step_fused(layout: BlockLayout, state: jnp.ndarray,
+                       workload: StencilWorkload = LIFE, *,
+                       interpret: bool = True) -> jnp.ndarray:
+    """v3 entry point (fused strip reads); see ``_stencil_step_fused``."""
+    layout.materialize()  # static tables must be built outside the trace
+    return _stencil_step_fused(layout, state, workload, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("layout", "workload", "interpret"))
+def _stencil_step_fused(layout: BlockLayout, state: jnp.ndarray,
+                        workload: StencilWorkload = LIFE, *,
+                        interpret: bool = True) -> jnp.ndarray:
+    """One workload step, v3: per-direction strip/corner arrays are built
+    with contiguous XLA slices and the kernel reads the neighbor's strip
     directly through a table-dependent BlockSpec — the halo tensor of v2
     is never materialised (saves ~8(rho+2) HBM bytes/block/step)."""
     rho, nb = layout.rho, layout.n_blocks
-    z_row = jnp.zeros((1, rho), state.dtype)
-    z1 = jnp.zeros((1, 1), state.dtype)
-    top = jnp.concatenate([state[:, 0, :], z_row], 0)       # (nb+1, rho)
-    bot = jnp.concatenate([state[:, -1, :], z_row], 0)
-    west = jnp.concatenate([state[:, :, 0], z_row], 0)
-    east = jnp.concatenate([state[:, :, -1], z_row], 0)
-    c_nw = jnp.concatenate([state[:, 0, 0:1], z1], 0)        # (nb+1, 1)
-    c_ne = jnp.concatenate([state[:, 0, -1:], z1], 0)
-    c_sw = jnp.concatenate([state[:, -1, 0:1], z1], 0)
-    c_se = jnp.concatenate([state[:, -1, -1:], z1], 0)
+    s, chan = _with_channels(workload, state)
+    nc = s.shape[0]
+    z_row = jnp.zeros((nc, 1, rho), s.dtype)
+    z1 = jnp.zeros((nc, 1, 1), s.dtype)
+    top = jnp.concatenate([s[:, :, 0, :], z_row], 1)     # (C, nb+1, rho)
+    bot = jnp.concatenate([s[:, :, -1, :], z_row], 1)
+    west = jnp.concatenate([s[:, :, :, 0], z_row], 1)
+    east = jnp.concatenate([s[:, :, :, -1], z_row], 1)
+    c_nw = jnp.concatenate([s[:, :, 0, 0:1], z1], 1)     # (C, nb+1, 1)
+    c_ne = jnp.concatenate([s[:, :, 0, -1:], z1], 1)
+    c_sw = jnp.concatenate([s[:, :, -1, 0:1], z1], 1)
+    c_se = jnp.concatenate([s[:, :, -1, -1:], z1], 1)
 
     table = jnp.asarray(layout.neighbor_table)  # ghost == nb
 
     def at(d):
         def idx(i, tbl):
-            return (tbl[i, d], 0)
+            return (0, tbl[i, d], 0)
         return idx
 
     # MOORE_DIRS order: NW, N, NE, W, E, SW, S, SE
-    row = lambda f: pl.BlockSpec((1, rho), f)       # noqa: E731
-    cell = lambda f: pl.BlockSpec((1, 1), f)        # noqa: E731
+    row = lambda f: pl.BlockSpec((nc, 1, rho), f)       # noqa: E731
+    cell = lambda f: pl.BlockSpec((nc, 1, 1), f)        # noqa: E731
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nb,),
         in_specs=[
-            pl.BlockSpec((1, rho, rho), lambda i, tbl: (i, 0, 0)),
+            pl.BlockSpec((nc, 1, rho, rho), lambda i, tbl: (0, i, 0, 0)),
             row(at(6)),   # S neighbor's top row
             row(at(1)),   # N neighbor's bottom row
             row(at(4)),   # E neighbor's west col
@@ -235,15 +292,37 @@ def life_step_fused(layout: BlockLayout, state: jnp.ndarray, *,
             cell(at(0)), cell(at(2)), cell(at(5)), cell(at(7)),
             pl.BlockSpec((rho, rho), lambda i, tbl: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, rho, rho), lambda i, tbl: (i, 0, 0)),
+        out_specs=pl.BlockSpec((nc, 1, rho, rho), lambda i, tbl: (0, i, 0, 0)),
     )
 
     # corner args are the DIAGONAL neighbor's opposite corner: e.g. my NW
     # halo cell is the NW neighbor's SE corner, hence c_se @ tbl[:, NW]
-    return pl.pallas_call(
-        _fused_kernel,
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, workload),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((nb, rho, rho), jnp.uint8),
+        out_shape=jax.ShapeDtypeStruct((nc, nb, rho, rho), workload.dtype),
         interpret=interpret,
-    )(table, state, top, bot, west, east,
+    )(table, s, top, bot, west, east,
       c_se, c_sw, c_ne, c_nw, jnp.asarray(layout.micro_mask))
+    return out if chan else out[0]
+
+
+# ======================================================================
+# legacy game-of-life entry points (kept for the original call sites)
+# ======================================================================
+def life_step_blocks(layout: BlockLayout, state: jnp.ndarray, *,
+                     interpret: bool = True) -> jnp.ndarray:
+    """One GoL step; state (n_blocks, rho, rho) uint8 -> same."""
+    return stencil_step_blocks(layout, state, LIFE, interpret=interpret)
+
+
+def life_step_strips(layout: BlockLayout, state: jnp.ndarray, *,
+                     interpret: bool = True) -> jnp.ndarray:
+    """One GoL step, v2 (strip halos); state (n_blocks, rho, rho) uint8."""
+    return stencil_step_strips(layout, state, LIFE, interpret=interpret)
+
+
+def life_step_fused(layout: BlockLayout, state: jnp.ndarray, *,
+                    interpret: bool = True) -> jnp.ndarray:
+    """One GoL step, v3 (in-kernel strip reads)."""
+    return stencil_step_fused(layout, state, LIFE, interpret=interpret)

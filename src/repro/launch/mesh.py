@@ -4,6 +4,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.utils.jax_compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False, data: int = 16,
                          model: int = 16):
@@ -17,9 +19,7 @@ def make_production_mesh(*, multi_pod: bool = False, data: int = 16,
     assert data * model == 256, "single pod is 256 chips"
     shape = (2, data, model) if multi_pod else (data, model)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(model_axis: int = 1):
@@ -27,6 +27,4 @@ def make_local_mesh(model_axis: int = 1):
     n = jax.device_count()
     assert n % model_axis == 0
     shape = (n // model_axis, model_axis)
-    return jax.make_mesh(
-        shape, ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh(shape, ("data", "model"))

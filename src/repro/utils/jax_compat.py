@@ -1,0 +1,63 @@
+"""Version compatibility shims for the jax API surface this repo uses.
+
+The repo targets the newer jax API (``jax.shard_map``, ``jax.make_mesh``
+with ``axis_types``); the pinned CI / container runtime is jax 0.4.x where
+``shard_map`` still lives in ``jax.experimental`` and ``Mesh`` has no axis
+types. Route every use through here so call sites stay version-agnostic.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_rep: bool = True):
+    """``jax.shard_map`` where available, else the jax.experimental one.
+
+    ``check_rep`` is forwarded under whichever name the installed jax
+    uses (``check_rep`` on 0.4.x/experimental, ``check_vma`` on newer
+    ``jax.shard_map``) so disabling replication checks behaves the same
+    across versions.
+    """
+    import inspect
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    params = inspect.signature(fn).parameters
+    for name in ("check_rep", "check_vma"):
+        if name in params:
+            kwargs[name] = check_rep
+            break
+    return fn(f, **kwargs)
+
+
+def pvary(x, axis_names):
+    """``jax.lax.pvary`` where it exists (newer jax requires marking values
+    as device-varying inside shard_map); identity on 0.4.x, where every
+    value is implicitly varying."""
+    fn = getattr(jax.lax, "pvary", None)
+    return x if fn is None else fn(x, axis_names)
+
+
+def cost_analysis_dict(compiled):
+    """``compiled.cost_analysis()`` normalized to a flat dict (0.4.x returns
+    a one-element list of dicts, newer jax returns the dict directly, some
+    backends return None)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+def make_mesh(axis_shapes, axis_names, *, auto_axes: bool = True):
+    """``jax.make_mesh``, passing ``axis_types`` only where it exists.
+
+    On jax >= 0.5 explicit ``AxisType.Auto`` matches the old implicit
+    default; on 0.4.x every mesh axis is Auto and the kwarg is absent.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None and auto_axes:
+        return jax.make_mesh(
+            axis_shapes, axis_names,
+            axis_types=(axis_type.Auto,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names)

@@ -1,0 +1,22 @@
+"""Pluggable stencil workloads + the batched multi-fractal runtime.
+
+``StencilWorkload`` carries everything rule-specific (dtype, neighbor
+weights, update rule, init distribution); the engines in ``core/`` and the
+Pallas kernels in ``kernels/`` are parameterized by one. ``BatchedRunner``
+vmaps a compiled step over a batch of independent simulations and caches
+compiled engines per static ``(kind, fractal, r, m, workload)`` tuple.
+"""
+from repro.workloads.base import StencilWorkload, weighted_moore_agg
+from repro.workloads.rules import (GRAY_SCOTT, HEAT, HEAT3D, HIGHLIFE, LIFE,
+                                   LIFE3D, SEEDS, WORKLOADS, GrayScott,
+                                   HeatDiffusion, TotalisticCA, get_workload,
+                                   life_rule)
+from repro.workloads.runner import BatchedRunner, RunnerStats, default_runner
+
+__all__ = [
+    "StencilWorkload", "weighted_moore_agg",
+    "TotalisticCA", "HeatDiffusion", "GrayScott",
+    "LIFE", "LIFE3D", "HIGHLIFE", "SEEDS", "HEAT", "HEAT3D", "GRAY_SCOTT",
+    "WORKLOADS", "get_workload", "life_rule",
+    "BatchedRunner", "RunnerStats", "default_runner",
+]

@@ -1,0 +1,138 @@
+"""The ``StencilWorkload`` abstraction: what the engines simulate.
+
+The paper frames Squeeze as a general scheme for data-parallel computation
+on a fractal with neighborhood access; the game of life of Section 4 is
+one instance. A workload bundles everything rule-specific so that the
+engines (BB, lambda, Squeeze cell/block/3D) and the Pallas kernels stay
+rule-agnostic. (The multi-device engine in core/distributed.py is still
+life-only; its fused tile step has not been ported to workloads yet.)
+
+  * ``dtype`` / ``agg_dtype``  — cell state and accumulation dtypes;
+  * ``n_channels``             — 1 (scalar field) or C (e.g. Gray-Scott's
+                                 (U, V) pair). Multi-channel states carry a
+                                 leading channel axis: (C, *spatial).
+  * ``weight(offset)``         — per-direction neighbor weight, dimension
+                                 agnostic ((dx, dy) or (dx, dy, dz)); a 0
+                                 weight means the direction is never read;
+  * ``apply(center, agg, mask)`` — the update rule, given the weighted
+                                 neighbor aggregate. ``mask`` is the {0,1}
+                                 occupancy (holes/boundary), or None when
+                                 the caller's domain has no holes (cell
+                                 engine: every compact cell is real);
+  * ``init(key, shape)``       — the initial-state distribution over the
+                                 *unmasked* spatial domain (engines mask).
+
+Out-of-fractal and hole neighbors always contribute 0 to the aggregate —
+dead cells for CA rules, Dirichlet-0 boundaries for the PDE rules — which
+is exactly the paper's adaptation of life to the fractal (Section 4).
+
+See DESIGN.md Section 3 for how this composes with the engines and the
+batched runner.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+#: Moore neighborhood directions (dx, dy), y growing downward. Defined here
+#: (the dependency-free layer); ``core.compact`` re-exports it, so the
+#: workloads package imports nothing from ``core`` (no import cycle).
+MOORE_DIRS: Tuple[Tuple[int, int], ...] = (
+    (-1, -1), (0, -1), (1, -1),
+    (-1, 0), (1, 0),
+    (-1, 1), (0, 1), (1, 1),
+)
+
+
+class StencilWorkload:
+    """Base class; concrete workloads are frozen dataclasses (hashable, so
+    a workload can be a jit static argument and an engine-cache key)."""
+
+    name: str = "abstract"
+    #: number of state channels; multi-channel states are (C, *spatial)
+    n_channels: int = 1
+    #: spatial dimensionality the rule is defined for (None = any)
+    ndim = None
+    #: cell state dtype
+    dtype = jnp.uint8
+    #: accumulation dtype for the neighbor aggregate
+    agg_dtype = jnp.int32
+
+    # ------------------------------------------------------------- rule spec
+    def weight(self, offset) -> float:
+        """Weight of the neighbor at ``offset`` (any dimensionality)."""
+        return 1
+
+    def apply(self, center: Array, agg: Array, mask) -> Array:
+        """Update rule: next state from (center, weighted neighbor aggregate).
+
+        ``center``/``agg`` have a leading channel axis iff n_channels > 1.
+        Implementations must zero holes when ``mask`` is given.
+        """
+        raise NotImplementedError
+
+    def init(self, key, shape) -> Array:
+        """Initial state over spatial ``shape`` ((C, *shape) if C > 1)."""
+        raise NotImplementedError
+
+    # ------------------------------------------------------------ conveniences
+    @property
+    def weights2d(self):
+        """Weights over the 2D Moore directions, MOORE_DIRS order."""
+        return tuple(self.weight(d) for d in MOORE_DIRS)
+
+    def tile_rule(self, center: Array, padded: Array, mask) -> Array:
+        """One update on a halo-padded tile: ``center`` (C?, h, w), ``padded``
+        (C?, h+2, w+2). This is the traced function the Pallas kernels call
+        in place of the old hard-coded life rule."""
+        agg = weighted_moore_agg(padded, self.weights2d, self.agg_dtype)
+        return self.apply(center, agg, mask)
+
+    def masked(self, state: Array, mask) -> Array:
+        return state if mask is None else state * mask.astype(state.dtype)
+
+
+def check_workload_ndim(workload: "StencilWorkload", ndim: int):
+    """Raise if a workload is bound to an engine of the wrong spatial
+    dimensionality (e.g. the 2D heat instance on a 3D engine, whose
+    Laplacian degree and stability bound would silently be wrong)."""
+    if workload.ndim is not None and workload.ndim != ndim:
+        raise ValueError(
+            f"workload {workload.name!r} is {workload.ndim}D-only; "
+            f"engine is {ndim}D")
+
+
+def weighted_gather_agg(dirs, weights, gather, shape, agg_dtype) -> Array:
+    """Weighted neighbor aggregate from a per-direction ``gather(offset)``
+    callback (the gather/scatter engines' counterpart of
+    ``weighted_moore_agg``). Zero-weight directions are never gathered;
+    unit weights skip the multiply (keeps integer CA aggregates exact)."""
+    agg = jnp.zeros(shape, agg_dtype)
+    for d, wt in zip(dirs, weights):
+        if wt == 0:
+            continue
+        val = gather(d).astype(agg_dtype)
+        agg = agg + (val if wt == 1 else val * jnp.asarray(wt, agg_dtype))
+    return agg
+
+
+def weighted_moore_agg(padded: Array, weights, agg_dtype) -> Array:
+    """Weighted 8-neighbor aggregate from a (+1)-padded array.
+
+    ``padded`` is (..., H+2, W+2); returns (..., H, W). Slicing runs on the
+    trailing two axes, so channel/block leading axes broadcast through.
+    Zero-weight directions are never read; unit weights skip the multiply
+    (keeps integer CA aggregates exact).
+    """
+    h, w = padded.shape[-2] - 2, padded.shape[-1] - 2
+    agg = jnp.zeros(padded.shape[:-2] + (h, w), agg_dtype)
+    for (dx, dy), wt in zip(MOORE_DIRS, weights):
+        if wt == 0:
+            continue
+        sl = padded[..., 1 + dy:h + 1 + dy, 1 + dx:w + 1 + dx]
+        sl = sl.astype(agg_dtype)
+        agg = agg + (sl if wt == 1 else sl * jnp.asarray(wt, agg_dtype))
+    return agg

@@ -1,0 +1,146 @@
+"""Batched multi-fractal simulation runtime.
+
+Serving many concurrent fractal simulations means many independent initial
+states over a small set of static configurations ``(engine kind, fractal,
+r, m, workload)``. This module provides the building block:
+
+  * one compiled step per static configuration, vmapped over a leading
+    batch axis of independent states (B simulations advance in one XLA
+    call);
+  * an LRU cache of those compiled engines keyed by the static tuple, so
+    a serving process pays tracing/compilation once per configuration, not
+    once per request;
+  * trace/build counters (``RunnerStats``) so reuse is *testable* — the
+    suite asserts >= 8 concurrent simulations share one compiled engine.
+
+See DESIGN.md Section 3.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import TYPE_CHECKING, Hashable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.workloads.base import StencilWorkload
+from repro.workloads.rules import LIFE
+
+if TYPE_CHECKING:  # annotation-only; keeps runtime free of core imports
+    from repro.core.fractals import NBBFractal
+
+Array = jnp.ndarray
+
+#: static configuration of one simulation family:
+#: (kind, fractal, r, m, workload). The fractal stays ``Hashable`` here so
+#: this module needs nothing from ``repro.core`` at import time.
+Key = Tuple[str, Hashable, int, int, StencilWorkload]
+
+
+@dataclasses.dataclass
+class RunnerStats:
+    builds: int = 0    # engines constructed (LRU misses)
+    traces: int = 0    # jax traces of the batched step (recompilations)
+    evictions: int = 0
+
+
+@dataclasses.dataclass
+class _Entry:
+    engine: object
+    batched_step: callable
+    batched_run: callable
+
+
+class BatchedRunner:
+    """LRU cache of compiled batched engines over (kind, frac, r, m, wl)."""
+
+    def __init__(self, capacity: int = 16):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self.stats = RunnerStats()
+        self._cache: "OrderedDict[Key, _Entry]" = OrderedDict()
+
+    # ------------------------------------------------------------- cache
+    def _get(self, kind: str, frac: NBBFractal, r: int, m: int,
+             workload: StencilWorkload) -> _Entry:
+        if kind == "pallas":  # make_engine's alias; one cache slot, not two
+            kind = "pallas-strips"
+        key: Key = (kind, frac, r, m, workload)
+        entry = self._cache.get(key)
+        if entry is not None:
+            self._cache.move_to_end(key)
+            return entry
+        from repro.core.stencil import make_engine
+        engine = make_engine(kind, frac, r, m, workload=workload)
+        stats = self.stats
+
+        def traced_step(state):
+            stats.traces += 1  # runs only while tracing; cached calls skip it
+            return engine.step(state)
+
+        batched_step = jax.jit(jax.vmap(traced_step))
+
+        @jax.jit
+        def batched_run(states, steps):
+            body = jax.vmap(traced_step)
+            return jax.lax.fori_loop(
+                0, steps, lambda _, s: body(s), states)
+
+        entry = _Entry(engine, batched_step, batched_run)
+        self._cache[key] = entry
+        stats.builds += 1
+        if len(self._cache) > self.capacity:
+            self._cache.popitem(last=False)
+            stats.evictions += 1
+        return entry
+
+    def engine_for(self, kind: str, frac: NBBFractal, r: int, m: int = 0,
+                   workload: StencilWorkload = LIFE):
+        """The (cached) underlying single-simulation engine."""
+        return self._get(kind, frac, r, m, workload).engine
+
+    def cache_size(self) -> int:
+        return len(self._cache)
+
+    # ---------------------------------------------------------- batched API
+    def init_batch(self, kind: str, frac: NBBFractal, r: int,
+                   seeds, m: int = 0,
+                   workload: StencilWorkload = LIFE) -> Array:
+        """Stack independent initial states: (B, *state_shape)."""
+        engine = self.engine_for(kind, frac, r, m, workload)
+        return jnp.stack([engine.init_random(int(s)) for s in seeds])
+
+    def step(self, kind: str, frac: NBBFractal, r: int, states: Array,
+             m: int = 0, workload: StencilWorkload = LIFE) -> Array:
+        """One step of B independent simulations, one compiled call."""
+        return self._get(kind, frac, r, m, workload).batched_step(states)
+
+    def run(self, kind: str, frac: NBBFractal, r: int, states: Array,
+            steps: int, m: int = 0,
+            workload: StencilWorkload = LIFE) -> Array:
+        """``steps`` steps of B independent simulations. ``steps`` is a
+        dynamic fori_loop bound: changing it does not retrace."""
+        entry = self._get(kind, frac, r, m, workload)
+        return entry.batched_run(states, jnp.asarray(steps, jnp.int32))
+
+    def to_expanded(self, kind: str, frac: NBBFractal, r: int,
+                    states: Array, m: int = 0,
+                    workload: StencilWorkload = LIFE) -> Array:
+        """Batched conversion to the (B, C?, n, n) expanded embedding."""
+        engine = self.engine_for(kind, frac, r, m, workload)
+        if hasattr(engine, "to_expanded"):
+            return jax.vmap(engine.to_expanded)(states)
+        return states  # BB/lambda states are already expanded
+
+
+#: process-wide default runner (a serving process wants exactly one cache)
+_DEFAULT: Optional[BatchedRunner] = None
+
+
+def default_runner() -> BatchedRunner:
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = BatchedRunner()
+    return _DEFAULT

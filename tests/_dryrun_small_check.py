@@ -10,6 +10,8 @@ import dataclasses  # noqa: E402
 
 import jax  # noqa: E402
 
+from repro.utils.jax_compat import make_mesh  # noqa: E402
+
 from repro import configs  # noqa: E402
 from repro.launch import specs as specs_lib  # noqa: E402
 from repro.utils import hlo as hlo_lib  # noqa: E402
@@ -40,8 +42,7 @@ def _shrink_shapes():
 def main():
     assert jax.device_count() == 8
     _shrink_shapes()
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
 
     # monkeypatch the registry to smoke configs
     real_get = configs.get_config

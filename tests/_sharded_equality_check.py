@@ -3,12 +3,15 @@
 single-device step — the sharding rules must preserve semantics, not just
 compile. Covers a dense arch and the MoE (shard-local dispatch) path."""
 import os
+import sys
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 import dataclasses  # noqa: E402
 
 import jax  # noqa: E402
+
+from repro.utils.jax_compat import make_mesh  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
@@ -40,8 +43,7 @@ def check(arch, seq_shard=False, tol=2e-3):
     p_ref, _, m_ref = step_ref(params, opt, batch)
 
     # sharded execution on a (4, 2) mesh with the production specs
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     p_sh = specs_lib.param_shardings(params, mesh)
     params_s = jax.device_put(params, p_sh)
     o_struct = jax.eval_shape(lambda: opt)
@@ -69,9 +71,14 @@ def check(arch, seq_shard=False, tol=2e-3):
 
 def main():
     assert jax.device_count() == 8
-    check("smollm-135m")
-    check("smollm-135m", seq_shard=True)
-    check("mixtral-8x22b")  # MoE shard-local dispatch path
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which not in ("all", "dense", "moe"):
+        raise SystemExit(f"unknown selector {which!r}")
+    if which in ("all", "dense"):
+        check("smollm-135m")
+        check("smollm-135m", seq_shard=True)
+    if which in ("all", "moe"):
+        check("mixtral-8x22b")  # MoE shard-local dispatch path
     print("SHARDED_EQ_OK")
 
 

@@ -1,0 +1,263 @@
+"""Workload subsystem tests: per-workload cross-engine equivalence (cell /
+block / BB / lambda, step-for-step in expanded space), dense expanded-space
+references for the PDE workloads, Pallas kernel parity, and the batched
+runner (vmap-vs-loop equality + compiled-engine reuse)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import fractals
+from repro.core.compact import BlockLayout
+from repro.core.stencil import make_engine
+from repro.kernels import squeeze_stencil as sk
+from repro.workloads import (GRAY_SCOTT, HEAT, HIGHLIFE, LIFE, BatchedRunner,
+                             TotalisticCA, get_workload)
+
+ALL_WORKLOADS = [LIFE, HIGHLIFE, HEAT, GRAY_SCOTT]
+WL_IDS = [w.name for w in ALL_WORKLOADS]
+
+CASES = [
+    (fractals.SIERPINSKI, 5, 2),
+    (fractals.CARPET, 3, 1),
+    (fractals.VICSEK, 3, 1),
+]
+CASE_IDS = [f"{f.name}-r{r}-m{m}" for f, r, m in CASES]
+
+
+def _tol(wl):
+    return dict(rtol=0, atol=0) if wl.dtype == jnp.uint8 \
+        else dict(rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------- cross-engine parity
+@pytest.mark.parametrize("frac,r,m", CASES, ids=CASE_IDS)
+@pytest.mark.parametrize("wl", ALL_WORKLOADS, ids=WL_IDS)
+def test_engines_agree_per_workload(frac, r, m, wl):
+    bb = make_engine("bb", frac, r, workload=wl)
+    lam = make_engine("lambda", frac, r, workload=wl)
+    cell = make_engine("cell", frac, r, workload=wl)
+    blk = make_engine("block", frac, r, m, workload=wl)
+
+    e0 = bb.init_random(seed=7)
+    s_bb, s_lam = e0, e0
+    s_cell = cell.init_random(seed=7)
+    s_blk = blk.init_random(seed=7)
+    np.testing.assert_array_equal(np.asarray(cell.to_expanded(s_cell)),
+                                  np.asarray(e0))
+    np.testing.assert_array_equal(np.asarray(blk.to_expanded(s_blk)),
+                                  np.asarray(e0))
+
+    for step in range(5):
+        s_bb = bb.step(s_bb)
+        s_lam = lam.step(s_lam)
+        s_cell = cell.step(s_cell)
+        s_blk = blk.step(s_blk)
+        np.testing.assert_allclose(
+            np.asarray(s_lam), np.asarray(s_bb), **_tol(wl),
+            err_msg=f"{wl.name}: lambda-engine diverged at step {step}")
+        np.testing.assert_allclose(
+            np.asarray(cell.to_expanded(s_cell)), np.asarray(s_bb),
+            **_tol(wl),
+            err_msg=f"{wl.name}: squeeze-cell diverged at step {step}")
+        np.testing.assert_allclose(
+            np.asarray(blk.to_expanded(s_blk)), np.asarray(s_bb),
+            **_tol(wl),
+            err_msg=f"{wl.name}: squeeze-block diverged at step {step}")
+
+
+# ------------------------------------------- dense expanded-space references
+def _dense_heat_step(state, mask, alpha):
+    p = np.pad(state, 1)
+    agg = (p[:-2, 1:-1] + p[2:, 1:-1] + p[1:-1, :-2] + p[1:-1, 2:])
+    return (state + alpha * (agg - 4.0 * state)) * mask
+
+
+def test_heat_matches_dense_reference():
+    frac, r = fractals.SIERPINSKI, 5
+    eng = make_engine("cell", frac, r, workload=HEAT)
+    mask = np.asarray(frac.mask(r)).astype(np.float32)
+    s = eng.init_random(seed=3)
+    ref = np.asarray(eng.to_expanded(s))
+    for step in range(8):
+        s = eng.step(s)
+        ref = _dense_heat_step(ref, mask, HEAT.alpha)
+        np.testing.assert_allclose(
+            np.asarray(eng.to_expanded(s)), ref, rtol=1e-5, atol=1e-5,
+            err_msg=f"heat diverged from dense reference at step {step}")
+    # diffusion with Dirichlet-0 holes loses mass monotonically
+    assert ref.sum() < np.asarray(eng.to_expanded(
+        make_engine("cell", frac, r, workload=HEAT).init_random(3))).sum()
+
+
+def _dense_gray_scott_step(u, v, mask, wl):
+    def lap(a):
+        p = np.pad(a, 1)
+        ortho = p[:-2, 1:-1] + p[2:, 1:-1] + p[1:-1, :-2] + p[1:-1, 2:]
+        diag = p[:-2, :-2] + p[:-2, 2:] + p[2:, :-2] + p[2:, 2:]
+        return 0.2 * ortho + 0.05 * diag - a
+    uvv = u * v * v
+    nu = u + wl.du * lap(u) - uvv + wl.feed * (1.0 - u)
+    nv = v + wl.dv * lap(v) + uvv - (wl.feed + wl.kill) * v
+    return nu * mask, nv * mask
+
+
+def test_gray_scott_matches_dense_reference():
+    frac, r, m = fractals.SIERPINSKI, 5, 2
+    eng = make_engine("block", frac, r, m, workload=GRAY_SCOTT)
+    mask = np.asarray(frac.mask(r)).astype(np.float32)
+    s = eng.init_random(seed=11)
+    e = np.asarray(eng.to_expanded(s))
+    u, v = e[0], e[1]
+    for step in range(6):
+        s = eng.step(s)
+        u, v = _dense_gray_scott_step(u, v, mask, GRAY_SCOTT)
+        got = np.asarray(eng.to_expanded(s))
+        np.testing.assert_allclose(
+            got[0], u, rtol=1e-5, atol=1e-5,
+            err_msg=f"gray-scott U diverged at step {step}")
+        np.testing.assert_allclose(
+            got[1], v, rtol=1e-5, atol=1e-5,
+            err_msg=f"gray-scott V diverged at step {step}")
+
+
+# ------------------------------------------------------- Pallas kernel parity
+@pytest.mark.parametrize("variant", ["blocks", "strips", "fused"])
+@pytest.mark.parametrize("wl", ALL_WORKLOADS, ids=WL_IDS)
+def test_pallas_kernels_run_all_workloads(wl, variant):
+    frac, r, m = fractals.SIERPINSKI, 5, 2
+    layout = BlockLayout(frac, r, m)
+    eng = make_engine("block", frac, r, m, workload=wl)
+    step = {"blocks": sk.stencil_step_blocks,
+            "strips": sk.stencil_step_strips,
+            "fused": sk.stencil_step_fused}[variant]
+    s = eng.init_random(seed=5)
+    for i in range(3):
+        want = eng.step(s)
+        got = step(layout, s, wl, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), **_tol(wl),
+            err_msg=f"{wl.name}/{variant} diverged at step {i}")
+        s = got
+
+
+def test_pallas_engine_factory_kinds():
+    frac, r, m = fractals.CARPET, 3, 1
+    for wl in (LIFE, GRAY_SCOTT):
+        blk = make_engine("block", frac, r, m, workload=wl)
+        pal = make_engine("pallas-strips", frac, r, m, workload=wl)
+        s = blk.init_random(seed=2)
+        np.testing.assert_allclose(np.asarray(pal.step(s)),
+                                   np.asarray(blk.step(s)), **_tol(wl))
+
+
+# ----------------------------------------------------------- batched runner
+def test_batched_runner_matches_python_loop():
+    frac, r = fractals.SIERPINSKI, 5
+    runner = BatchedRunner()
+    for kind, m, wl in [("cell", 0, HEAT), ("block", 2, GRAY_SCOTT),
+                        ("cell", 0, LIFE)]:
+        states = runner.init_batch(kind, frac, r, seeds=range(5), m=m,
+                                   workload=wl)
+        stepped = runner.step(kind, frac, r, states, m=m, workload=wl)
+        ran = runner.run(kind, frac, r, states, steps=4, m=m, workload=wl)
+        eng = runner.engine_for(kind, frac, r, m=m, workload=wl)
+        for b in range(states.shape[0]):
+            ref = states[b]
+            np.testing.assert_allclose(np.asarray(stepped[b]),
+                                       np.asarray(eng.step(ref)), **_tol(wl))
+            for _ in range(4):
+                ref = eng.step(ref)
+            np.testing.assert_allclose(np.asarray(ran[b]), np.asarray(ref),
+                                       **_tol(wl),
+                                       err_msg=f"{kind}/{wl.name} batch {b}")
+
+
+def test_batched_runner_reuses_compiled_engine():
+    """>= 8 concurrent simulations of one (kind, frac, r, m, workload)
+    config must share a single built+traced engine (the compile-count
+    assertion from the acceptance criteria)."""
+    frac, r = fractals.SIERPINSKI, 5
+    runner = BatchedRunner()
+    states = runner.init_batch("cell", frac, r, seeds=range(8),
+                               workload=HEAT)
+    assert states.shape[0] == 8
+    for _ in range(3):
+        states = runner.step("cell", frac, r, states, workload=HEAT)
+    # stepping one-at-a-time through the same cache entry: still no rebuild
+    for b in range(8):
+        runner.step("cell", frac, r, states[b:b + 1], workload=HEAT)
+    assert runner.stats.builds == 1, runner.stats
+    # batched (B=8) and single (B=1) shapes each trace once, nothing more
+    assert runner.stats.traces == 2, runner.stats
+    # a different workload is a different cache entry
+    runner.init_batch("cell", frac, r, seeds=range(2), workload=LIFE)
+    assert runner.stats.builds == 2
+    assert runner.cache_size() == 2
+
+
+def test_batched_runner_lru_evicts():
+    frac = fractals.SIERPINSKI
+    runner = BatchedRunner(capacity=2)
+    for r in (3, 4, 5):
+        runner.engine_for("cell", frac, r, workload=LIFE)
+    assert runner.cache_size() == 2
+    assert runner.stats.evictions == 1
+    # oldest (r=3) was evicted; re-requesting it rebuilds
+    runner.engine_for("cell", frac, 3, workload=LIFE)
+    assert runner.stats.builds == 4
+
+
+def test_batched_runner_normalizes_pallas_alias():
+    frac, r, m = fractals.CARPET, 3, 1
+    runner = BatchedRunner()
+    e1 = runner.engine_for("pallas", frac, r, m=m, workload=LIFE)
+    e2 = runner.engine_for("pallas-strips", frac, r, m=m, workload=LIFE)
+    assert e1 is e2
+    assert runner.stats.builds == 1
+    assert runner.cache_size() == 1
+
+
+def test_batched_runner_to_expanded():
+    frac, r, m = fractals.CARPET, 3, 1
+    runner = BatchedRunner()
+    states = runner.init_batch("block", frac, r, seeds=range(3), m=m,
+                               workload=HEAT)
+    exp = runner.to_expanded("block", frac, r, states, m=m, workload=HEAT)
+    n = frac.side(r)
+    assert exp.shape == (3, n, n)
+    eng = runner.engine_for("block", frac, r, m=m, workload=HEAT)
+    np.testing.assert_allclose(np.asarray(exp[1]),
+                               np.asarray(eng.to_expanded(states[1])))
+
+
+# --------------------------------------------------------------- misc rules
+def test_workload_registry_roundtrip():
+    assert get_workload("life") is LIFE
+    assert get_workload("gray-scott") is GRAY_SCOTT
+    with pytest.raises(KeyError):
+        get_workload("nope")
+
+
+def test_workload_ndim_guard():
+    """A dimension-specific workload on the wrong-dimension engine must
+    raise instead of silently computing a wrong Laplacian."""
+    from repro.core import fractals3d as f3
+    from repro.core.stencil3d import BB3DEngine
+    from repro.workloads import HEAT3D
+    with pytest.raises(ValueError, match="3D-only"):
+        make_engine("bb", fractals.SIERPINSKI, 3, workload=HEAT3D)
+    with pytest.raises(ValueError, match="2D-only"):
+        BB3DEngine(f3.SIERPINSKI3D, 2, HEAT)
+    with pytest.raises(ValueError, match="single-channel"):
+        BB3DEngine(f3.SIERPINSKI3D, 2, GRAY_SCOTT)
+
+
+def test_totalistic_life_matches_legacy_rule():
+    from repro.workloads import life_rule
+    rng = np.random.default_rng(0)
+    alive = jnp.asarray(rng.integers(0, 2, (16, 16)), jnp.uint8)
+    counts = jnp.asarray(rng.integers(0, 9, (16, 16)), jnp.int32)
+    want = life_rule(alive, counts)
+    got = TotalisticCA().apply(alive, counts, None)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
