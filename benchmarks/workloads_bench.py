@@ -1,13 +1,21 @@
 """Per-workload step timing on the Sierpinski triangle: one step of each
 workload (life, totalistic highlife, heat, Gray-Scott) on the cell, block,
-and Pallas-strips engines, plus the batched-runner throughput at batch 8.
+and Pallas-strips engines, the batched-runner throughput at batch 8, and
+the temporal-fusion k sweep (fused k-step launches vs single stepping on
+the block engines, with a parity assertion).
 
     PYTHONPATH=src python benchmarks/workloads_bench.py [--r 9] [--m 2]
                                                         [--smoke]
+                                                        [--fusion-only]
 
-Writes BENCH_workloads.json (one record per (workload, engine)) and prints
-the common.emit CSV rows. ``--smoke`` shrinks the level so the script
-doubles as a CI check that every (workload, engine) pair runs end to end.
+Writes BENCH_workloads.json (one record per (workload, engine)) and
+BENCH_fusion.json (one record per (engine, workload, k): us_per_step and
+mcells_per_s, amortized over the fused launch), and prints the
+common.emit CSV rows. ``--smoke`` shrinks the level so the script doubles
+as a CI check that every (workload, engine, k) combination runs end to
+end; the fusion sweep *fails* (nonzero exit) if fused-k stepping diverges
+from k single steps. ``--fusion-only`` skips the workload section (the CI
+perf-smoke step).
 """
 from __future__ import annotations
 
@@ -19,6 +27,7 @@ import sys
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
 import jax  # noqa: E402
+import numpy as np  # noqa: E402
 
 from repro.core import fractals  # noqa: E402
 from repro.core.stencil import make_engine  # noqa: E402
@@ -28,6 +37,10 @@ from benchmarks.common import emit, time_fn  # noqa: E402
 
 ENGINES = ("cell", "block", "pallas-strips")
 WORKLOADS = (LIFE, HIGHLIFE, HEAT, GRAY_SCOTT)
+
+FUSION_ENGINES = ("block", "pallas-strips")
+FUSION_WORKLOADS = (LIFE, HEAT, GRAY_SCOTT)
+FUSION_KS = (1, 2, 3)
 
 
 def bench_one(kind: str, frac, r: int, m: int, wl, iters: int) -> dict:
@@ -65,6 +78,81 @@ def bench_batched(frac, r: int, m: int, wl, iters: int, batch: int) -> dict:
     return rec
 
 
+def _tol(wl):
+    return dict(rtol=0, atol=0) if wl is LIFE or wl is HIGHLIFE \
+        else dict(rtol=1e-5, atol=1e-5)
+
+
+def bench_fusion_one(kind: str, frac, r: int, m: int, wl, k: int,
+                     iters: int) -> dict:
+    """Amortized per-step cost of k-fused stepping: one timed call is one
+    ``step_k`` launch (k=1: one ``step``), us_per_step = launch / k.
+    Fused-vs-single parity is asserted before timing — the bench doubles
+    as the CI fused-k correctness smoke."""
+    eng = make_engine(kind, frac, r, m, workload=wl, fusion_k=k)
+    state = eng.init_random(seed=0)
+    if k > 1:
+        want = state
+        for _ in range(k):
+            want = eng.step(want)
+        got = eng.step_k(state, k)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), **_tol(wl),
+            err_msg=f"fused-k parity broke: {kind}/{wl.name}/k={k}")
+        us = time_fn(lambda s: eng.step_k(s, k), state, iters=iters) / k
+    else:
+        us = time_fn(eng.step, state, iters=iters)
+    cells = frac.volume(r)
+    rec = {
+        "workload": wl.name, "engine": kind, "fractal": frac.name,
+        "r": r, "m": m, "k": k, "us_per_step": us,
+        "cells": cells, "mcells_per_s": cells / us,
+    }
+    emit(f"fusion/{wl.name}/{kind}/k{k}", us,
+         f"r={r};m={m};mcups={rec['mcells_per_s']:.1f}")
+    return rec
+
+
+def bench_fusion(frac, r: int, m: int, iters: int, out_path: str) -> None:
+    # the speedup gate below compares wall-clock medians, so never drop
+    # below 10 reps even in --smoke mode (2 reps flake on loaded runners)
+    iters = max(iters, 10)
+    rho = frac.s ** m
+    records = []
+    for kind in FUSION_ENGINES:
+        for wl in FUSION_WORKLOADS:
+            for k in FUSION_KS:
+                if k > rho and kind.startswith("pallas"):
+                    emit(f"fusion/{wl.name}/{kind}/k{k}", None,
+                         f"skipped:k>rho={rho}")
+                    continue  # v4 kernel is one-block-ring only
+                records.append(
+                    bench_fusion_one(kind, frac, r, m, wl, k, iters))
+    # the point of temporal fusion: at least one fused configuration must
+    # beat single stepping per step (fail loudly if the hot path regressed)
+    speedups = []
+    for rec in records:
+        if rec["k"] == 1:
+            continue
+        base = next(b for b in records
+                    if b["k"] == 1 and b["engine"] == rec["engine"]
+                    and b["workload"] == rec["workload"])
+        speedups.append((rec["us_per_step"] < base["us_per_step"],
+                         rec["engine"], rec["workload"], rec["k"],
+                         base["us_per_step"] / rec["us_per_step"]))
+    out = pathlib.Path(out_path)
+    out.write_text(json.dumps({
+        "fractal": frac.name, "r": r, "m": m,
+        "backend": jax.default_backend(), "records": records}, indent=2))
+    print(f"wrote {out} ({len(records)} records)")
+    # JSON is written first so a regression still leaves the timings behind
+    if not any(s[0] for s in speedups):
+        raise SystemExit(
+            "fused k>=2 stepping is not faster than k=1 anywhere: "
+            + "; ".join(f"{e}/{w}/k={k}: {x:.2f}x"
+                        for _, e, w, k, x in speedups))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--r", type=int, default=9)
@@ -73,25 +161,36 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny level, 2 iters (CI end-to-end check)")
+    ap.add_argument("--fusion-only", action="store_true",
+                    help="run only the temporal-fusion k sweep")
+    ap.add_argument("--no-fusion", action="store_true",
+                    help="skip the temporal-fusion k sweep (CI runs it "
+                         "as its own step)")
     ap.add_argument("--out", default="BENCH_workloads.json")
+    ap.add_argument("--fusion-out", default="BENCH_fusion.json")
     args = ap.parse_args()
     if args.smoke:
         args.r, args.m, args.iters = 5, 2, 2
 
     frac = fractals.SIERPINSKI
-    records = []
-    for wl in WORKLOADS:
-        for kind in ENGINES:
-            records.append(bench_one(kind, frac, args.r, args.m, wl,
-                                     args.iters))
-        records.append(bench_batched(frac, args.r, args.m, wl, args.iters,
-                                     args.batch))
+    if not args.fusion_only:
+        records = []
+        for wl in WORKLOADS:
+            for kind in ENGINES:
+                records.append(bench_one(kind, frac, args.r, args.m, wl,
+                                         args.iters))
+            records.append(bench_batched(frac, args.r, args.m, wl,
+                                         args.iters, args.batch))
 
-    out = pathlib.Path(args.out)
-    out.write_text(json.dumps({
-        "fractal": frac.name, "r": args.r, "m": args.m,
-        "backend": jax.default_backend(), "records": records}, indent=2))
-    print(f"wrote {out} ({len(records)} records)")
+        out = pathlib.Path(args.out)
+        out.write_text(json.dumps({
+            "fractal": frac.name, "r": args.r, "m": args.m,
+            "backend": jax.default_backend(), "records": records},
+            indent=2))
+        print(f"wrote {out} ({len(records)} records)")
+
+    if not args.no_fusion:
+        bench_fusion(frac, args.r, args.m, args.iters, args.fusion_out)
 
 
 if __name__ == "__main__":

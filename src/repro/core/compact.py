@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Tuple
 
 import jax.numpy as jnp
@@ -81,6 +82,14 @@ class BlockLayout:
         _ = self.block_origin_expanded, self.neighbor_table
         return self
 
+    def materialize_halo(self, k: int) -> "BlockLayout":
+        """Build the depth-``k`` halo geometry eagerly (same contract as
+        ``materialize``: fused-k entry points call this outside any trace)."""
+        self.materialize()
+        _ = self.existence_table
+        _ = self.offset_table(k), self.window_mask(k), self.halo_mask(k)
+        return self
+
     @property
     def rho(self) -> int:
         return self.frac.s ** self.m
@@ -124,20 +133,17 @@ class BlockLayout:
                                  jnp.asarray(bx), jnp.asarray(by))
         return np.stack([np.asarray(ex), np.asarray(ey)], axis=1) * self.rho
 
-    @functools.cached_property
-    def neighbor_table(self) -> np.ndarray:
-        """(n_blocks, 8) int32 compact block id per Moore direction.
-
-        Built with the paper's maps at block granularity: one lambda per
-        block, one nu per (block, direction); out-of-fractal neighbors get
-        the ``ghost`` sentinel (a zero block is appended before gathers).
-        """
+    def _map_offsets_to_table(self, offsets) -> np.ndarray:
+        """(n_blocks, len(offsets)) int32 compact block id per block offset,
+        built with the paper's maps at block granularity: one lambda per
+        block, one nu per (block, offset); out-of-fractal blocks get the
+        ``ghost`` sentinel (a zero block is appended before gathers)."""
         frac, r_b = self.frac, self.r_b
         bx, by = (jnp.asarray(a) for a in self.block_coords)
         ex, ey = maps.lambda_map(frac, r_b, bx, by)
         _, cols_b = self.block_dims
-        table = np.empty((self.n_blocks, 8), dtype=np.int32)
-        for d, (dx, dy) in enumerate(MOORE_DIRS):
+        table = np.empty((self.n_blocks, len(offsets)), dtype=np.int32)
+        for d, (dx, dy) in enumerate(offsets):
             nx, ny = ex + dx, ey + dy
             valid = maps.is_fractal(frac, r_b, nx, ny)
             cx, cy = maps.nu_map(frac, r_b,
@@ -146,6 +152,112 @@ class BlockLayout:
             ids = jnp.where(valid, cy * cols_b + cx, self.ghost)
             table[:, d] = np.asarray(ids, dtype=np.int32)
         return table
+
+    @functools.cached_property
+    def neighbor_table(self) -> np.ndarray:
+        """(n_blocks, 8) int32 compact block id per Moore direction."""
+        return self._map_offsets_to_table(MOORE_DIRS)
+
+    @functools.cached_property
+    def existence_table(self) -> np.ndarray:
+        """(n_blocks, 8) int32 {0,1}: 1 where the Moore neighbor block is a
+        real fractal block, 0 where ``neighbor_table`` holds the ghost
+        sentinel. Scalar-prefetch operand of the fused-k kernel (gates the
+        periodic window mask so ghost halo regions stay zero across
+        substeps)."""
+        return (self.neighbor_table != self.ghost).astype(np.int32)
+
+    # ------------------------------------------------------- depth-k halos
+    def halo_block_radius(self, k: int) -> int:
+        """Neighborhood radius in *blocks* covering a depth-``k`` cell halo
+        (1 while k <= rho; grows for deeper fusion than one block ring)."""
+        if k < 1:
+            raise ValueError(f"halo depth must be >= 1, got {k}")
+        return math.ceil(k / self.rho)
+
+    def halo_offsets(self, k: int) -> Tuple[Tuple[int, int], ...]:
+        """Block offsets (bdx, bdy) whose tiles intersect the depth-``k``
+        halo window, raster-ordered; equals ``MOORE_DIRS`` when k <= rho."""
+        kb = self.halo_block_radius(k)
+        return tuple((dx, dy)
+                     for dy in range(-kb, kb + 1)
+                     for dx in range(-kb, kb + 1)
+                     if (dx, dy) != (0, 0))
+
+    @functools.cached_property
+    def _halo_cache(self) -> dict:
+        """Per-instance memo for the depth-k tables/masks. Deliberately not
+        ``functools.lru_cache`` on the methods: that would key on ``self``
+        in a class-level cache and pin every layout (and its (n_blocks,
+        rho+2k, rho+2k) halo masks) process-wide forever — defeating the
+        runner's LRU eviction. This dict dies with the layout."""
+        return {}
+
+    def _memo(self, key, build):
+        cache = self._halo_cache
+        if key not in cache:
+            cache[key] = build()
+        return cache[key]
+
+    def offset_table(self, k: int) -> np.ndarray:
+        """(n_blocks, len(halo_offsets(k))) int32 compact block id per
+        offset, ghost sentinel for out-of-fractal blocks.
+
+        The generalization of ``neighbor_table`` to arbitrary block
+        distance: each entry is one lambda + one nu evaluation *per offset*
+        directly against the maps, never a composition of unit-step tables
+        — composing through a ghost would mis-drop real blocks that sit
+        beyond a hole, so every depth is resolved exactly (out-of-fractal
+        reads stay zero at every depth, nothing else does).
+        """
+        return self._memo(("offset_table", self.halo_block_radius(k)),
+                          lambda: self._build_offset_table(k))
+
+    def _build_offset_table(self, k: int) -> np.ndarray:
+        if self.halo_block_radius(k) == 1:
+            return self.neighbor_table  # identical construction + ordering
+        return self._map_offsets_to_table(self.halo_offsets(k))
+
+    def _halo_region(self, k: int, bdx: int, bdy: int):
+        """Static window/source slices for one block offset: the overlap of
+        the neighbor tile at (bdx, bdy) with the (rho+2k)^2 halo window.
+        Returns ((dy0, dy1, dx0, dx1) in the window,
+                 (sy0, sy1, sx0, sx1) in the neighbor tile)."""
+        rho = self.rho
+        w = rho + 2 * k
+        x0, y0 = k + bdx * rho, k + bdy * rho
+        dx0, dx1 = max(x0, 0), min(x0 + rho, w)
+        dy0, dy1 = max(y0, 0), min(y0 + rho, w)
+        return (dy0, dy1, dx0, dx1), (dy0 - y0, dy1 - y0, dx0 - x0, dx1 - x0)
+
+    def window_mask(self, k: int) -> np.ndarray:
+        """(rho+2k, rho+2k) uint8: periodic extension of ``micro_mask`` over
+        the depth-``k`` window. By self-similarity every *existing* neighbor
+        block carries exactly ``micro_mask``, so this is the halo occupancy
+        before ghost gating."""
+        def build():
+            idx = np.arange(-k, self.rho + k) % self.rho
+            return self.micro_mask[np.ix_(idx, idx)]
+        return self._memo(("window_mask", k), build)
+
+    def halo_mask(self, k: int) -> np.ndarray:
+        """(n_blocks, rho+2k, rho+2k) uint8 occupancy of each block's
+        depth-``k`` window: the periodic ``window_mask`` with the regions of
+        out-of-fractal (ghost) neighbor blocks zeroed per block. Fused-k
+        substeps multiply by a shrinking crop of this mask so hole *and*
+        ghost cells stay zero at every substep (the k-substep mask
+        discipline; see DESIGN.md Section 2)."""
+        return self._memo(("halo_mask", k), lambda: self._build_halo_mask(k))
+
+    def _build_halo_mask(self, k: int) -> np.ndarray:
+        w = self.rho + 2 * k
+        table = self.offset_table(k)
+        full = np.broadcast_to(self.window_mask(k),
+                               (self.n_blocks, w, w)).copy()
+        for oi, (bdx, bdy) in enumerate(self.halo_offsets(k)):
+            (dy0, dy1, dx0, dx1), _ = self._halo_region(k, bdx, bdy)
+            full[table[:, oi] == self.ghost, dy0:dy1, dx0:dx1] = 0
+        return full
 
     # ------------------------------------------------------------ conversions
     def to_expanded(self, state_b: Array) -> Array:
@@ -201,6 +313,34 @@ class BlockLayout:
         out = out.at[:, -1, 0].set(sw[:, 0, -1])
         out = out.at[:, -1, 1:-1].set(s_[:, 0, :])
         out = out.at[:, -1, -1].set(se[:, 0, 0])
+        return out
+
+    def pad_with_halo_k(self, state_b: Array, k: int) -> Array:
+        """Assemble (n_blocks, rho+2k, rho+2k) tiles with depth-``k`` halos.
+
+        The depth-1 generalization of ``pad_with_halo``: for each block
+        offset in ``halo_offsets(k)`` only the overlap strip of the neighbor
+        tile with the window is sliced *before* the gather (so HBM traffic
+        stays ~perimeter * k, not offsets * rho^2); ghost ids index the
+        appended zero strip, which keeps out-of-fractal reads zero at every
+        depth.
+        """
+        if k < 1:
+            raise ValueError(f"halo depth must be >= 1, got {k}")
+        rho, nb = self.rho, self.n_blocks
+        w = rho + 2 * k
+        table = jnp.asarray(self.offset_table(k))
+        out = jnp.zeros((nb, w, w), state_b.dtype)
+        out = out.at[:, k:k + rho, k:k + rho].set(state_b)
+        for oi, (bdx, bdy) in enumerate(self.halo_offsets(k)):
+            (dy0, dy1, dx0, dx1), (sy0, sy1, sx0, sx1) = \
+                self._halo_region(k, bdx, bdy)
+            strip = state_b[:, sy0:sy1, sx0:sx1]
+            strip = jnp.concatenate(
+                [strip, jnp.zeros((1,) + strip.shape[1:], state_b.dtype)],
+                axis=0)
+            out = out.at[:, dy0:dy1, dx0:dx1].set(
+                jnp.take(strip, table[:, oi], axis=0))
         return out
 
     def memory_bytes(self, dtype_size: int = 1) -> int:

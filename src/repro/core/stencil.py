@@ -17,11 +17,20 @@ paper's game of life); multi-channel workloads carry a leading channel
 axis (cell state (C, rows, cols); block state (C, n_blocks, rho, rho)).
 All engines produce states convertible to the same expanded embedding as
 the baselines (tests assert step-for-step equivalence).
+
+Temporal fusion: the block engines additionally expose ``step_k`` (k
+exact steps per launch via depth-k halos; DESIGN.md Section 2) and their
+``run(state, steps)`` tiles the step count into ceil(steps/k) fused
+launches plus a single-step remainder, with ``k`` chosen by the static
+``default_fusion_k`` heuristic unless the engine's ``fusion_k`` field
+overrides it. ``run(..., donate=True)`` donates the stepped state buffer
+to XLA (zero-copy steady-state stepping).
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +46,70 @@ from repro.workloads.base import (StencilWorkload, check_workload_ndim,
 from repro.workloads.rules import LIFE
 
 Array = jnp.ndarray
+
+
+def default_fusion_k(rho: int) -> int:
+    """Static temporal-fusion depth heuristic for a rho x rho block tile.
+
+    The fused working window is (rho+2k)^2, so deeper fusion trades
+    redundant halo-ring compute for ~k-fold amortization of dispatch,
+    table gathers and center HBM traffic. Small tiles can't afford a deep
+    ring (rho < 2 -> no fusion); big tiles amortize a ring of 3 easily.
+    Always <= rho, so the heuristic depth is valid for the Pallas fused-k
+    kernel as well as the XLA path. Explicit ``fusion_k`` on the engines
+    (or ``k=`` on the runner) overrides this.
+    """
+    if rho < 2:
+        return 1
+    return 3 if rho >= 8 else 2
+
+
+class _FusedStepping:
+    """Temporal-fusion run machinery shared by the block engines.
+
+    Hosts require a ``layout``, a ``fusion_k`` field, ``step(state)`` and
+    ``step_k(state, k)``; they override ``_materialize_fused(k)`` to build
+    whatever static geometry their k-step body reads (outside any trace).
+    """
+
+    @property
+    def effective_fusion_k(self) -> int:
+        if self.fusion_k is not None:
+            return self.fusion_k
+        return default_fusion_k(self.layout.rho)
+
+    def _materialize_fused(self, k: int) -> None:
+        raise NotImplementedError
+
+    def _run_impl(self, state: Array, steps) -> Array:
+        k = self.effective_fusion_k
+        if k <= 1:
+            return jax.lax.fori_loop(0, steps,
+                                     lambda _, s: self.step(s), state)
+        state = jax.lax.fori_loop(0, steps // k,
+                                  lambda _, s: self.step_k(s, k), state)
+        return jax.lax.fori_loop(0, steps % k,
+                                 lambda _, s: self.step(s), state)
+
+    @partial(jax.jit, static_argnums=0)
+    def _run(self, state: Array, steps) -> Array:
+        return self._run_impl(state, steps)
+
+    @partial(jax.jit, static_argnums=0, donate_argnums=1)
+    def _run_donated(self, state: Array, steps) -> Array:
+        return self._run_impl(state, steps)
+
+    def run(self, state: Array, steps, donate: bool = False) -> Array:
+        """``steps`` steps, tiled into floor(steps/k) fused k-step launches
+        plus a steps%k single-step remainder (``steps`` stays a dynamic
+        loop bound: changing it does not retrace). ``donate=True`` donates
+        the input state buffer to XLA — zero-copy steady-state stepping;
+        the caller must not reuse ``state`` afterwards."""
+        k = self.effective_fusion_k
+        if k > 1:                 # the k<=1 path never touches halo tables
+            self._materialize_fused(k)
+        fn = self._run_donated if donate else self._run
+        return fn(state, jnp.asarray(steps, jnp.int32))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,14 +159,23 @@ class SqueezeCellEngine:
 
 
 @dataclasses.dataclass(frozen=True)
-class SqueezeBlockEngine:
-    """Block-level Squeeze (paper Section 3.5) with a static neighbor table."""
+class SqueezeBlockEngine(_FusedStepping):
+    """Block-level Squeeze (paper Section 3.5) with a static neighbor table.
+
+    ``fusion_k`` sets the temporal-fusion depth used by ``run`` (None =
+    the ``default_fusion_k`` heuristic). The XLA ``step_k`` path supports
+    any k >= 1 — depths beyond rho span multiple block rings through the
+    depth-k offset tables.
+    """
 
     layout: BlockLayout
     workload: StencilWorkload = LIFE
+    fusion_k: Optional[int] = None
 
     def __post_init__(self):
         check_workload_ndim(self.workload, 2)
+        if self.fusion_k is not None and self.fusion_k < 1:
+            raise ValueError(f"fusion_k must be >= 1, got {self.fusion_k}")
         self.layout.materialize()
 
     @property
@@ -123,31 +205,58 @@ class SqueezeBlockEngine:
         mask = jnp.asarray(self.layout.micro_mask)  # broadcasts over C?, nb
         return wl.apply(state, agg, mask).astype(state.dtype)
 
-    def run(self, state: Array, steps: int) -> Array:
-        return jax.lax.fori_loop(0, steps, lambda _, s: self.step(s), state)
+    # ------------------------------------------------------ temporal fusion
+    def _materialize_fused(self, k: int) -> None:
+        self.layout.materialize_halo(k)
+
+    def step_k(self, state: Array, k: int) -> Array:
+        """Advance ``k`` exact steps in one fused computation: one depth-k
+        halo assembly, then k in-register substeps on the shrinking window
+        (XLA path; any k >= 1, including k > rho)."""
+        self.layout.materialize_halo(k)  # host tables outside the trace
+        return self._step_k(state, k)
+
+    @partial(jax.jit, static_argnums=(0, 2))
+    def _step_k(self, state: Array, k: int) -> Array:
+        wl = self.workload
+        pad = partial(self.layout.pad_with_halo_k, k=k)
+        if wl.n_channels > 1:
+            pad = jax.vmap(pad)  # over the leading channel axis
+        padded = pad(state)  # (C?, nb, rho+2k, rho+2k)
+        hmask = jnp.asarray(self.layout.halo_mask(k))  # (nb, rho+2k, rho+2k)
+        return wl.tile_rule_k(padded, hmask, k).astype(state.dtype)
 
     def memory_bytes(self, dtype_size: int = 1) -> int:
         return self.workload.n_channels * self.layout.memory_bytes(dtype_size)
 
 
 @dataclasses.dataclass(frozen=True)
-class SqueezePallasEngine:
+class SqueezePallasEngine(_FusedStepping):
     """Block-level Squeeze with the step fused into a Pallas kernel.
 
     ``variant`` selects the halo strategy of kernels/squeeze_stencil.py:
     'blocks' (v1, paper-shaped), 'strips' (v2, pre-gathered strip halos) or
     'fused' (v3, in-kernel strip reads). State layout and conversions are
-    identical to ``SqueezeBlockEngine``.
+    identical to ``SqueezeBlockEngine``. ``run`` steps through the v4
+    temporal-fusion kernel (``stencil_step_fused_k``) whenever the
+    effective fusion depth is > 1; ``fusion_k`` overrides the heuristic
+    but must stay <= rho (the kernel's one-block-ring limit).
     """
 
     layout: BlockLayout
     workload: StencilWorkload = LIFE
     variant: str = "strips"
+    fusion_k: Optional[int] = None
 
     def __post_init__(self):
         if self.variant not in ("blocks", "strips", "fused"):
             raise ValueError(f"unknown Pallas variant {self.variant!r}")
         check_workload_ndim(self.workload, 2)
+        if self.fusion_k is not None and not (
+                1 <= self.fusion_k <= self.layout.rho):
+            raise ValueError(
+                f"pallas fusion_k must be in [1, rho={self.layout.rho}], "
+                f"got {self.fusion_k}")
         self.layout.materialize()
 
     @property
@@ -172,21 +281,33 @@ class SqueezePallasEngine:
               "fused": ops.stencil_step_fused}[self.variant]
         return fn(self.layout, state, self.workload)
 
-    def run(self, state: Array, steps: int) -> Array:
-        step = self.step
-        return jax.lax.fori_loop(0, steps, lambda _, s: step(s), state)
+    # ------------------------------------------------------ temporal fusion
+    def _materialize_fused(self, k: int) -> None:
+        # only what the v4 kernel reads — not the XLA path's per-block
+        # halo_mask/offset_table (O(n_blocks (rho+2k)^2) host build)
+        _ = self.layout.existence_table, self.layout.window_mask(k)
+
+    def step_k(self, state: Array, k: int) -> Array:
+        """Advance ``k`` exact steps in one v4 kernel launch (k <= rho)."""
+        from repro.kernels import ops
+        return ops.stencil_step_fused_k(self.layout, state, self.workload,
+                                        k=k)
 
     def memory_bytes(self, dtype_size: int = 1) -> int:
         return self.workload.n_channels * self.layout.memory_bytes(dtype_size)
 
 
 def make_engine(kind: str, frac: NBBFractal, r: int, m: int = 0,
-                workload: StencilWorkload = LIFE):
+                workload: StencilWorkload = LIFE,
+                fusion_k: Optional[int] = None):
     """Engine factory.
 
     kind: 'bb' | 'lambda' | 'cell' | 'block' | 'pallas-blocks' |
           'pallas-strips' | 'pallas-fused' ('pallas' = 'pallas-strips').
-    ``m`` (block level, rho = s**m) only applies to the block/pallas kinds.
+    ``m`` (block level, rho = s**m) and ``fusion_k`` (temporal-fusion
+    depth for ``run``; None = heuristic) only apply to the block/pallas
+    kinds — the expanded-space and cell engines have no block tiles to
+    fuse over.
     """
     from repro.core.baselines import LambdaEngine
     if kind == "bb":
@@ -196,10 +317,12 @@ def make_engine(kind: str, frac: NBBFractal, r: int, m: int = 0,
     if kind == "cell":
         return SqueezeCellEngine(frac, r, workload)
     if kind == "block":
-        return SqueezeBlockEngine(BlockLayout(frac, r, m), workload)
+        return SqueezeBlockEngine(BlockLayout(frac, r, m), workload,
+                                  fusion_k=fusion_k)
     if kind == "pallas":
         kind = "pallas-strips"
     if kind.startswith("pallas-"):
         return SqueezePallasEngine(BlockLayout(frac, r, m), workload,
-                                   variant=kind[len("pallas-"):])
+                                   variant=kind[len("pallas-"):],
+                                   fusion_k=fusion_k)
     raise ValueError(f"unknown engine kind {kind!r}")

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -74,13 +76,15 @@ def flash_attention(q, k, v, *, causal: bool = True,
                     window: Optional[int] = None,
                     softcap: Optional[float] = None,
                     bq: int = 128, bk: int = 128,
-                    interpret: bool = True):
+                    interpret: Optional[bool] = None):
     """q: (B, H, Sq, D); k, v: (B, H, Sk, D) (kv already broadcast to H).
 
     Sq/Sk must be divisible by bq/bk (callers pad). Queries are
     right-aligned against keys (kv_off = Sk - Sq), so decode (Sq=1 with a
-    long cache) masks correctly.
+    long cache) masks correctly. ``interpret=None`` auto-detects
+    (compiled on TPU, interpreter elsewhere).
     """
+    interpret = resolve_interpret(interpret)
     b, h, sq, d = q.shape
     sk = k.shape[2]
     bq = min(bq, sq)

@@ -1,0 +1,20 @@
+"""Shared helpers for the Pallas kernel entry points."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def default_interpret() -> bool:
+    """True off-TPU (run the Pallas interpreter), False on TPU (compile the
+    Mosaic kernel). The kernels target TPU; every other backend (the CI
+    container is CPU-only) gets the interpreter."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """``None`` means auto-detect via ``default_interpret``; explicit bools
+    pass through unchanged (tests pass ``interpret=True`` so they stay
+    deterministic on any backend)."""
+    return default_interpret() if interpret is None else bool(interpret)

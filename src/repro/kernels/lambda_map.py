@@ -11,6 +11,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.fractals import NBBFractal
 from repro.core.maps import lambda_weight_matrix
+from repro.kernels.common import resolve_interpret
 
 RPAD = 128
 LANES = 128
@@ -50,8 +51,11 @@ def _lambda_kernel(coords_ref, w_ref, out_ref, *, frac: NBBFractal, r: int):
 @functools.partial(jax.jit,
                    static_argnames=("frac", "r", "tile", "interpret"))
 def lambda_map_pallas(frac: NBBFractal, r: int, cx, cy, *,
-                      tile: int = 256, interpret: bool = True):
-    """MXU-encoded lambda(w) over a batch of compact coordinates."""
+                      tile: int = 256, interpret=None):
+    """MXU-encoded lambda(w) over a batch of compact coordinates.
+    ``interpret=None`` auto-detects (compiled on TPU, interpreter
+    elsewhere)."""
+    interpret = resolve_interpret(interpret)
     if 2 * r > RPAD:
         raise ValueError(f"2r={2*r} exceeds the padded contraction dim {RPAD}")
     shape = cx.shape

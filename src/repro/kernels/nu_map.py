@@ -24,6 +24,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.fractals import NBBFractal
 from repro.core.maps import nu_weight_matrix
+from repro.kernels.common import resolve_interpret
 
 RPAD = 128  # contraction dim padded to the MXU systolic width
 LANES = 128
@@ -70,11 +71,14 @@ def _nu_kernel(coords_ref, w_ref, out_ref, *, frac: NBBFractal, r: int,
 @functools.partial(jax.jit,
                    static_argnames=("frac", "r", "tile", "interpret"))
 def nu_map_pallas(frac: NBBFractal, r: int, ex, ey, *,
-                  tile: int = 256, interpret: bool = True):
+                  tile: int = 256, interpret=None):
     """MXU-encoded nu(w) over a batch of expanded coordinates.
 
     Returns (cx, cy, valid) with the same leading shape as ex/ey.
+    ``interpret=None`` auto-detects (compiled on TPU, interpreter
+    elsewhere); pass an explicit bool to pin it.
     """
+    interpret = resolve_interpret(interpret)
     if r > RPAD:
         raise ValueError(f"r={r} exceeds the padded contraction dim {RPAD}")
     shape = ex.shape

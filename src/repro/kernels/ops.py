@@ -1,19 +1,19 @@
 """jit'd public wrappers for the Pallas kernels.
 
-``interpret`` defaults to True off-TPU (this container is CPU-only; the
-kernels target TPU and are validated in interpret mode per the kernel
-tests). On a TPU runtime pass ``interpret=False`` (or rely on the default)
-to run the compiled Mosaic kernels.
+``interpret=None`` everywhere means auto-detect: compiled Mosaic on a TPU
+runtime, the Pallas interpreter on every other backend (this container is
+CPU-only; the kernels are validated in interpret mode per the kernel
+tests). Pass an explicit bool to pin it. Resolution happens once, in the
+kernel entry points (``kernels.common.resolve_interpret``); these
+wrappers pass ``interpret`` through untouched.
 """
 from __future__ import annotations
 
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
-
 from repro.core.compact import BlockLayout
 from repro.core.fractals import NBBFractal
+from repro.kernels.common import default_interpret  # noqa: F401  re-export
 from repro.workloads.rules import LIFE
 from repro.kernels import attention as _attention
 from repro.kernels import lambda_map as _lambda
@@ -21,31 +21,21 @@ from repro.kernels import nu_map as _nu
 from repro.kernels import squeeze_stencil as _stencil
 
 
-def default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
 def nu_map_tc(frac: NBBFractal, r: int, ex, ey, *,
               interpret: Optional[bool] = None):
     """Tensor-core (MXU) nu(w): (cx, cy, valid)."""
-    if interpret is None:
-        interpret = default_interpret()
     return _nu.nu_map_pallas(frac, r, ex, ey, interpret=interpret)
 
 
 def lambda_map_tc(frac: NBBFractal, r: int, cx, cy, *,
                   interpret: Optional[bool] = None):
     """Tensor-core (MXU) lambda(w): (ex, ey)."""
-    if interpret is None:
-        interpret = default_interpret()
     return _lambda.lambda_map_pallas(frac, r, cx, cy, interpret=interpret)
 
 
 def stencil_step_blocks(layout: BlockLayout, state, workload=LIFE, *,
                         interpret: Optional[bool] = None):
     """Fused block-level workload step, v1 (neighbor-block staging)."""
-    if interpret is None:
-        interpret = default_interpret()
     return _stencil.stencil_step_blocks(layout, state, workload,
                                         interpret=interpret)
 
@@ -53,8 +43,6 @@ def stencil_step_blocks(layout: BlockLayout, state, workload=LIFE, *,
 def stencil_step_strips(layout: BlockLayout, state, workload=LIFE, *,
                         interpret: Optional[bool] = None):
     """Fused block-level workload step, v2 (strip halos)."""
-    if interpret is None:
-        interpret = default_interpret()
     return _stencil.stencil_step_strips(layout, state, workload,
                                         interpret=interpret)
 
@@ -62,25 +50,27 @@ def stencil_step_strips(layout: BlockLayout, state, workload=LIFE, *,
 def stencil_step_fused(layout: BlockLayout, state, workload=LIFE, *,
                        interpret: Optional[bool] = None):
     """Fused block-level workload step, v3 (in-kernel strip reads)."""
-    if interpret is None:
-        interpret = default_interpret()
     return _stencil.stencil_step_fused(layout, state, workload,
                                        interpret=interpret)
+
+
+def stencil_step_fused_k(layout: BlockLayout, state, workload=LIFE, *,
+                         k: int = 2, interpret: Optional[bool] = None):
+    """Fused block-level workload step, v4 (temporal fusion): k exact
+    steps per launch on a depth-k halo tile held in VMEM. k <= rho."""
+    return _stencil.stencil_step_fused_k(layout, state, workload, k=k,
+                                         interpret=interpret)
 
 
 def life_step_blocks(layout: BlockLayout, state, *,
                      interpret: Optional[bool] = None):
     """Fused block-level GoL step, v1 (neighbor-block staging)."""
-    if interpret is None:
-        interpret = default_interpret()
     return _stencil.life_step_blocks(layout, state, interpret=interpret)
 
 
 def life_step_strips(layout: BlockLayout, state, *,
                      interpret: Optional[bool] = None):
     """Fused block-level GoL step, v2 (strip halos; lower HBM traffic)."""
-    if interpret is None:
-        interpret = default_interpret()
     return _stencil.life_step_strips(layout, state, interpret=interpret)
 
 
@@ -88,8 +78,6 @@ def life_step_fused(layout: BlockLayout, state, *,
                     interpret: Optional[bool] = None):
     """Fused block-level GoL step, v3 (in-kernel strip reads; no halo
     tensor materialised)."""
-    if interpret is None:
-        interpret = default_interpret()
     return _stencil.life_step_fused(layout, state, interpret=interpret)
 
 
@@ -97,8 +85,6 @@ def ssd_chunk_scan(x, dt, a, bm, cm, *, chunk: int = 128,
                    interpret: Optional[bool] = None):
     """Mamba-2 SSD scan with the Pallas intra-chunk kernel."""
     from repro.kernels import ssd_chunk as _ssd
-    if interpret is None:
-        interpret = default_interpret()
     return _ssd.ssd_chunk_scan(x, dt, a, bm, cm, chunk=chunk,
                                interpret=interpret)
 
@@ -109,8 +95,6 @@ def flash_attention(q, k, v, *, causal: bool = True,
                     bq: int = 128, bk: int = 128,
                     interpret: Optional[bool] = None):
     """Blocked online-softmax attention (causal/window/softcap)."""
-    if interpret is None:
-        interpret = default_interpret()
     return _attention.flash_attention(
         q, k, v, causal=causal, window=window, softcap=softcap,
         bq=bq, bk=bk, interpret=interpret)
@@ -118,5 +102,6 @@ def flash_attention(q, k, v, *, causal: bool = True,
 
 __all__ = ["nu_map_tc", "lambda_map_tc", "life_step_blocks",
            "life_step_strips", "life_step_fused", "stencil_step_blocks",
-           "stencil_step_strips", "stencil_step_fused", "flash_attention",
+           "stencil_step_strips", "stencil_step_fused",
+           "stencil_step_fused_k", "flash_attention",
            "ssd_chunk_scan", "default_interpret"]

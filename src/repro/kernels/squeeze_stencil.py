@@ -20,14 +20,33 @@ traced in-tile update (the halo plumbing below is rule-agnostic):
   * ``stencil_step_fused``   (v3): strip reads fused into the kernel via
     scalar-prefetch index maps — no materialized halo array.
 
+  * ``stencil_step_fused_k`` (v4, temporal fusion): one depth-k halo
+    gather, then k update substeps entirely in VMEM before the single
+    write-back — per simulated step this divides the dispatch, gather and
+    center HBM traffic by ~k at the cost of a (rho+2k)^2 working tile and
+    redundant halo-ring compute. The per-block window occupancy needed by
+    the substep mask discipline is reconstructed in-kernel from the shared
+    periodic ``window_mask`` plus a scalar-prefetched block-existence
+    table (see DESIGN.md Section 2).
+
+The v2/v3 halo plumbing skips gathers the workload can never read: the
+gathered direction set is derived from ``workload.weight(offset)``
+(``halo_needs``), so e.g. HeatDiffusion (orthogonal-only) skips all four
+corner gathers.
+
 Public state is (nb, rho, rho) for single-channel workloads and
 (C, nb, rho, rho) for multi-channel ones (e.g. Gray-Scott); the kernels
 always run with an explicit channel axis internally. The ``life_step_*``
 wrappers keep the original game-of-life entry points.
+
+``interpret=None`` on every entry point means auto-detect: compiled
+Mosaic on TPU, the Pallas interpreter elsewhere. Tests pass it
+explicitly to stay deterministic.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +54,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.compact import BlockLayout
-from repro.workloads.base import StencilWorkload
+from repro.kernels.common import resolve_interpret
+from repro.workloads.base import StencilWorkload, halo_needs
 from repro.workloads.rules import LIFE
 
 
@@ -78,10 +98,11 @@ def _blocks_kernel(workload, tbl_ref, c_ref, nw, n_, ne, w_, e_, sw, s_, se,
 
 def stencil_step_blocks(layout: BlockLayout, state: jnp.ndarray,
                         workload: StencilWorkload = LIFE, *,
-                        interpret: bool = True) -> jnp.ndarray:
+                        interpret: Optional[bool] = None) -> jnp.ndarray:
     """One workload step; state (C?, n_blocks, rho, rho) -> same."""
     layout.materialize()  # static tables must be built outside the trace
-    return _stencil_step_blocks(layout, state, workload, interpret=interpret)
+    return _stencil_step_blocks(layout, state, workload,
+                                interpret=resolve_interpret(interpret))
 
 
 @functools.partial(jax.jit,
@@ -141,17 +162,25 @@ def _strips_kernel(workload, c_ref, halo_ref, mask_ref, out_ref):
     out_ref[:, 0] = nxt.astype(out_ref.dtype)
 
 
-def _gather_halo_strips(layout: BlockLayout, s: jnp.ndarray) -> jnp.ndarray:
+def _gather_halo_strips(layout: BlockLayout, s: jnp.ndarray,
+                        needs=None) -> jnp.ndarray:
     """(C, nb, 4, rho+2) halo strips via strip-level XLA gathers.
 
     Only edge rows/cols of the neighbor blocks are touched (~4 rho per block
-    instead of 8 rho^2), which is the v2 traffic win.
+    instead of 8 rho^2), which is the v2 traffic win. ``needs`` (a
+    ``workloads.base.halo_needs`` tuple) drops the gathers the workload's
+    zero-weight directions can never read — dead pieces become constant
+    zeros instead of table gathers.
     """
     rho = layout.rho
-    nc = s.shape[0]
+    nc, nb = s.shape[0], layout.n_blocks
+    need_n, need_s, need_w, need_e, need_nw, need_ne, need_sw, need_se = \
+        needs if needs is not None else (True,) * 8
     table = jnp.asarray(layout.neighbor_table)
     z_row = jnp.zeros((nc, 1, rho), s.dtype)
     z_cell = jnp.zeros((nc, 1), s.dtype)
+    z_row_nb = jnp.zeros((nc, nb, rho), s.dtype)
+    z_cell_nb = jnp.zeros((nc, nb, 1), s.dtype)
 
     bottom = jnp.concatenate([s[:, :, -1, :], z_row], 1)   # (C, nb+1, rho)
     top = jnp.concatenate([s[:, :, 0, :], z_row], 1)
@@ -164,18 +193,19 @@ def _gather_halo_strips(layout: BlockLayout, s: jnp.ndarray) -> jnp.ndarray:
 
     # MOORE_DIRS order: NW, N, NE, W, E, SW, S, SE
     row_top = jnp.concatenate([
-        se_c[:, table[:, 0], None],          # my NW corner = NW nbr's SE cell
-        bottom[:, table[:, 1]],              # N nbr's bottom row
-        sw_c[:, table[:, 2], None],          # NE nbr's SW cell
+        # my NW corner = NW nbr's SE cell
+        se_c[:, table[:, 0], None] if need_nw else z_cell_nb,
+        bottom[:, table[:, 1]] if need_n else z_row_nb,  # N nbr's bottom row
+        sw_c[:, table[:, 2], None] if need_ne else z_cell_nb,  # NE's SW cell
     ], axis=2)                               # (C, nb, rho+2)
     row_bot = jnp.concatenate([
-        ne_c[:, table[:, 5], None],          # SW nbr's NE cell
-        top[:, table[:, 6]],                 # S nbr's top row
-        nw_c[:, table[:, 7], None],          # SE nbr's NW cell
+        ne_c[:, table[:, 5], None] if need_sw else z_cell_nb,  # SW's NE cell
+        top[:, table[:, 6]] if need_s else z_row_nb,     # S nbr's top row
+        nw_c[:, table[:, 7], None] if need_se else z_cell_nb,  # SE's NW cell
     ], axis=2)
-    col_w = jnp.pad(east[:, table[:, 3]],
+    col_w = jnp.pad(east[:, table[:, 3]] if need_w else z_row_nb,
                     ((0, 0), (0, 0), (0, 2)))    # W nbr's east col
-    col_e = jnp.pad(west[:, table[:, 4]],
+    col_e = jnp.pad(west[:, table[:, 4]] if need_e else z_row_nb,
                     ((0, 0), (0, 0), (0, 2)))    # E nbr's west col
     return jnp.stack([row_top, row_bot, col_w, col_e], axis=2)
 
@@ -187,10 +217,11 @@ def gather_halo_strips(layout: BlockLayout, state: jnp.ndarray) -> jnp.ndarray:
 
 def stencil_step_strips(layout: BlockLayout, state: jnp.ndarray,
                         workload: StencilWorkload = LIFE, *,
-                        interpret: bool = True) -> jnp.ndarray:
+                        interpret: Optional[bool] = None) -> jnp.ndarray:
     """One workload step, v2 (strip halos); state (C?, n_blocks, rho, rho)."""
     layout.materialize()  # static tables must be built outside the trace
-    return _stencil_step_strips(layout, state, workload, interpret=interpret)
+    return _stencil_step_strips(layout, state, workload,
+                                interpret=resolve_interpret(interpret))
 
 
 @functools.partial(jax.jit,
@@ -201,7 +232,7 @@ def _stencil_step_strips(layout: BlockLayout, state: jnp.ndarray,
     rho, nb = layout.rho, layout.n_blocks
     s, chan = _with_channels(workload, state)
     nc = s.shape[0]
-    halo = _gather_halo_strips(layout, s)
+    halo = _gather_halo_strips(layout, s, halo_needs(workload.weights2d))
     out = pl.pallas_call(
         functools.partial(_strips_kernel, workload),
         grid=(nb,),
@@ -219,32 +250,43 @@ def _stencil_step_strips(layout: BlockLayout, state: jnp.ndarray,
 # v3: strip reads fused into the kernel (scalar-prefetch index maps) —
 # no materialized (C, nb, 4, rho+2) halo array (EXPERIMENTS.md §Perf)
 # ======================================================================
-def _fused_kernel(workload, tbl_ref, c_ref, top, bot, west, east,
+def _fused_kernel(workload, needs, tbl_ref, c_ref, top, bot, west, east,
                   c_nw, c_ne, c_sw, c_se, mask_ref, out_ref):
     del tbl_ref
+    need_n, need_s, need_w, need_e, need_nw, need_ne, need_sw, need_se = needs
     rho = c_ref.shape[-1]
     c = c_ref[:, 0]                          # (C, rho, rho)
     padded = jnp.zeros(c.shape[:-2] + (rho + 2, rho + 2), c.dtype)
     padded = padded.at[..., 1:-1, 1:-1].set(c)
-    # neighbor strips (each ref already indexed at the right block)
-    padded = padded.at[..., 0, 1:-1].set(bot[:, 0])      # N's bottom
-    padded = padded.at[..., -1, 1:-1].set(top[:, 0])     # S's top
-    padded = padded.at[..., 1:-1, 0].set(east[:, 0])     # W's east
-    padded = padded.at[..., 1:-1, -1].set(west[:, 0])    # E's west
-    padded = padded.at[..., 0, 0].set(c_nw[:, 0, 0])
-    padded = padded.at[..., 0, -1].set(c_ne[:, 0, 0])
-    padded = padded.at[..., -1, 0].set(c_sw[:, 0, 0])
-    padded = padded.at[..., -1, -1].set(c_se[:, 0, 0])
+    # neighbor strips (each ref already indexed at the right block); pieces
+    # the workload's zero-weight directions never read stay zero
+    if need_n:
+        padded = padded.at[..., 0, 1:-1].set(bot[:, 0])      # N's bottom
+    if need_s:
+        padded = padded.at[..., -1, 1:-1].set(top[:, 0])     # S's top
+    if need_w:
+        padded = padded.at[..., 1:-1, 0].set(east[:, 0])     # W's east
+    if need_e:
+        padded = padded.at[..., 1:-1, -1].set(west[:, 0])    # E's west
+    if need_nw:
+        padded = padded.at[..., 0, 0].set(c_nw[:, 0, 0])
+    if need_ne:
+        padded = padded.at[..., 0, -1].set(c_ne[:, 0, 0])
+    if need_sw:
+        padded = padded.at[..., -1, 0].set(c_sw[:, 0, 0])
+    if need_se:
+        padded = padded.at[..., -1, -1].set(c_se[:, 0, 0])
     nxt = _tile_update(workload, c, padded, mask_ref[...])
     out_ref[:, 0] = nxt.astype(out_ref.dtype)
 
 
 def stencil_step_fused(layout: BlockLayout, state: jnp.ndarray,
                        workload: StencilWorkload = LIFE, *,
-                       interpret: bool = True) -> jnp.ndarray:
+                       interpret: Optional[bool] = None) -> jnp.ndarray:
     """v3 entry point (fused strip reads); see ``_stencil_step_fused``."""
     layout.materialize()  # static tables must be built outside the trace
-    return _stencil_step_fused(layout, state, workload, interpret=interpret)
+    return _stencil_step_fused(layout, state, workload,
+                               interpret=resolve_interpret(interpret))
 
 
 @functools.partial(jax.jit,
@@ -255,10 +297,14 @@ def _stencil_step_fused(layout: BlockLayout, state: jnp.ndarray,
     """One workload step, v3: per-direction strip/corner arrays are built
     with contiguous XLA slices and the kernel reads the neighbor's strip
     directly through a table-dependent BlockSpec — the halo tensor of v2
-    is never materialised (saves ~8(rho+2) HBM bytes/block/step)."""
+    is never materialised (saves ~8(rho+2) HBM bytes/block/step). Dead
+    directions (zero workload weight) get a constant zero operand with a
+    constant index map instead of a table-dependent strip read."""
     rho, nb = layout.rho, layout.n_blocks
     s, chan = _with_channels(workload, state)
     nc = s.shape[0]
+    need_n, need_s, need_w, need_e, need_nw, need_ne, need_sw, need_se = \
+        needs = halo_needs(workload.weights2d)
     z_row = jnp.zeros((nc, 1, rho), s.dtype)
     z1 = jnp.zeros((nc, 1, 1), s.dtype)
     top = jnp.concatenate([s[:, :, 0, :], z_row], 1)     # (C, nb+1, rho)
@@ -277,33 +323,183 @@ def _stencil_step_fused(layout: BlockLayout, state: jnp.ndarray,
             return (0, tbl[i, d], 0)
         return idx
 
-    # MOORE_DIRS order: NW, N, NE, W, E, SW, S, SE
-    row = lambda f: pl.BlockSpec((nc, 1, rho), f)       # noqa: E731
-    cell = lambda f: pl.BlockSpec((nc, 1, 1), f)        # noqa: E731
+    def const_idx(i, tbl):
+        return (0, 0, 0)
+
+    def row_in(arr, d, need):
+        """(operand, spec) for an edge-strip input: the neighbor's strip
+        through the table, or a single constant zero row when dead."""
+        if need:
+            return arr, pl.BlockSpec((nc, 1, rho), at(d))
+        return z_row, pl.BlockSpec((nc, 1, rho), const_idx)
+
+    def cell_in(arr, d, need):
+        if need:
+            return arr, pl.BlockSpec((nc, 1, 1), at(d))
+        return z1, pl.BlockSpec((nc, 1, 1), const_idx)
+
+    # MOORE_DIRS order: NW, N, NE, W, E, SW, S, SE. Corner args are the
+    # DIAGONAL neighbor's opposite corner: e.g. my NW halo cell is the NW
+    # neighbor's SE corner, hence c_se @ tbl[:, NW].
+    operands_specs = [
+        row_in(top, 6, need_s),    # S neighbor's top row
+        row_in(bot, 1, need_n),    # N neighbor's bottom row
+        row_in(west, 4, need_e),   # E neighbor's west col
+        row_in(east, 3, need_w),   # W neighbor's east col
+        cell_in(c_se, 0, need_nw), cell_in(c_sw, 2, need_ne),
+        cell_in(c_ne, 5, need_sw), cell_in(c_nw, 7, need_se),
+    ]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=(
+            [pl.BlockSpec((nc, 1, rho, rho), lambda i, tbl: (0, i, 0, 0))]
+            + [spec for _, spec in operands_specs]
+            + [pl.BlockSpec((rho, rho), lambda i, tbl: (0, 0))]),
+        out_specs=pl.BlockSpec((nc, 1, rho, rho), lambda i, tbl: (0, i, 0, 0)),
+    )
+
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, workload, needs),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nc, nb, rho, rho), workload.dtype),
+        interpret=interpret,
+    )(table, s, *[arr for arr, _ in operands_specs],
+      jnp.asarray(layout.micro_mask))
+    return out if chan else out[0]
+
+
+# ======================================================================
+# v4: temporal fusion — depth-k halo gathered once, k substeps in VMEM
+# ======================================================================
+def _halo_regions(rho: int, k: int):
+    """The 8 (ys, xs) window slices of the depth-k halo frame, in
+    MOORE_DIRS order (NW, N, NE, W, E, SW, S, SE)."""
+    w = rho + 2 * k
+    lo, mid, hi = slice(0, k), slice(k, k + rho), slice(k + rho, w)
+    return ((lo, lo), (lo, mid), (lo, hi), (mid, lo), (mid, hi),
+            (hi, lo), (hi, mid), (hi, hi))
+
+
+def _fused_k_kernel(workload, k, ex_ref, c_ref, top_ref, bot_ref, west_ref,
+                    east_ref, mask_ref, out_ref):
+    """One grid step = one block: assemble the (C, rho+2k, rho+2k) tile,
+    rebuild its occupancy (periodic window mask x prefetched block
+    existence), then run the workload's k fused substeps in VMEM."""
+    rho = c_ref.shape[-1]
+    w = rho + 2 * k
+    c = c_ref[:, 0]                          # (C, rho, rho)
+    padded = jnp.zeros(c.shape[:-2] + (w, w), c.dtype)
+    padded = padded.at[..., k:k + rho, k:k + rho].set(c)
+    padded = padded.at[..., :k, :].set(top_ref[:, 0])
+    padded = padded.at[..., -k:, :].set(bot_ref[:, 0])
+    padded = padded.at[..., k:k + rho, :k].set(west_ref[:, 0])
+    padded = padded.at[..., k:k + rho, -k:].set(east_ref[:, 0])
+
+    # the k-substep mask discipline: gate each halo region of the shared
+    # periodic occupancy by this block's neighbor existence so ghost cells
+    # stay zero at every substep, not just at the final write
+    i = pl.program_id(0)
+    mask = mask_ref[...].astype(jnp.int32)
+    for d, (ys, xs) in enumerate(_halo_regions(rho, k)):
+        mask = mask.at[ys, xs].set(mask[ys, xs] * ex_ref[i, d])
+
+    if workload.n_channels > 1:
+        nxt = workload.tile_rule_k(padded, mask, k)
+    else:
+        nxt = workload.tile_rule_k(padded[0], mask, k)[None]
+    out_ref[:, 0] = nxt.astype(out_ref.dtype)
+
+
+def _gather_halo_k(layout: BlockLayout, s: jnp.ndarray, k: int):
+    """Depth-k halo strips via strip-level XLA gathers over the static
+    neighbor table (k <= rho, so every strip comes from one Moore
+    neighbor): top/bot (C, nb, k, rho+2k) full-width rows including the
+    k x k diagonal corners, west/east (C, nb, rho, k) center columns.
+    Ghost ids index an appended zero strip.
+
+    No zero-weight skipping here: a k>=2 substep chain propagates corner
+    values inward even under orthogonal-only weights (the dependency cone
+    is the radius-k L1 ball), so every strip is live.
+    """
+    rho = layout.rho
+    nc = s.shape[0]
+    table = jnp.asarray(layout.neighbor_table)
+
+    def take(strip, d):  # strip (C, nb, h, w), pre-sliced before the gather
+        z = jnp.zeros((nc, 1) + strip.shape[2:], s.dtype)
+        return jnp.concatenate([strip, z], 1)[:, table[:, d]]
+
+    # MOORE_DIRS order: NW 0, N 1, NE 2, W 3, E 4, SW 5, S 6, SE 7
+    top = jnp.concatenate([take(s[:, :, rho - k:, rho - k:], 0),
+                           take(s[:, :, rho - k:, :], 1),
+                           take(s[:, :, rho - k:, :k], 2)], axis=-1)
+    bot = jnp.concatenate([take(s[:, :, :k, rho - k:], 5),
+                           take(s[:, :, :k, :], 6),
+                           take(s[:, :, :k, :k], 7)], axis=-1)
+    west = take(s[:, :, :, rho - k:], 3)
+    east = take(s[:, :, :, :k], 4)
+    return top, bot, west, east
+
+
+def stencil_step_fused_k(layout: BlockLayout, state: jnp.ndarray,
+                         workload: StencilWorkload = LIFE, *, k: int = 2,
+                         interpret: Optional[bool] = None) -> jnp.ndarray:
+    """v4: advance ``k`` exact steps in ONE kernel launch.
+
+    The depth-k halo is gathered once; the kernel runs k update substeps
+    on a (rho+2k)^2 tile held in VMEM (window shrinking by one ring per
+    substep) and writes the center back once — dispatch, table gather and
+    center HBM traffic are paid once per k simulated steps. Requires
+    k <= rho (deeper halos span multiple block rings; use the engines'
+    XLA fallback ``SqueezeBlockEngine.step_k`` beyond that).
+    state (C?, n_blocks, rho, rho) -> same, k steps later.
+    """
+    if k < 1:
+        raise ValueError(f"need k >= 1, got k={k}")
+    if k > layout.rho:
+        raise ValueError(
+            f"fused kernel needs k <= rho, got k={k} > rho={layout.rho} "
+            "(use SqueezeBlockEngine.step_k for deeper-than-one-block halos)")
+    # static geometry built outside the trace — only what v4 reads (the
+    # per-block halo_mask of the XLA path is reconstructed in-kernel)
+    layout.materialize()
+    _ = layout.existence_table, layout.window_mask(k)
+    return _stencil_step_fused_k(layout, state, workload, k,
+                                 interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("layout", "workload", "k", "interpret"))
+def _stencil_step_fused_k(layout: BlockLayout, state: jnp.ndarray,
+                          workload: StencilWorkload, k: int, *,
+                          interpret: bool) -> jnp.ndarray:
+    rho, nb = layout.rho, layout.n_blocks
+    s, chan = _with_channels(workload, state)
+    nc = s.shape[0]
+    w = rho + 2 * k
+    top, bot, west, east = _gather_halo_k(layout, s, k)
+    existence = jnp.asarray(layout.existence_table)      # (nb, 8) int32 0/1
+    wmask = jnp.asarray(layout.window_mask(k), jnp.int32)  # shared, periodic
+
+    blk = lambda *shape: pl.BlockSpec(shape, lambda i, ex: (0, i) + (0,) * (len(shape) - 2))  # noqa: E731,E501
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nb,),
         in_specs=[
-            pl.BlockSpec((nc, 1, rho, rho), lambda i, tbl: (0, i, 0, 0)),
-            row(at(6)),   # S neighbor's top row
-            row(at(1)),   # N neighbor's bottom row
-            row(at(4)),   # E neighbor's west col
-            row(at(3)),   # W neighbor's east col
-            cell(at(0)), cell(at(2)), cell(at(5)), cell(at(7)),
-            pl.BlockSpec((rho, rho), lambda i, tbl: (0, 0)),
+            blk(nc, 1, rho, rho),
+            blk(nc, 1, k, w), blk(nc, 1, k, w),      # top, bot rows
+            blk(nc, 1, rho, k), blk(nc, 1, rho, k),  # west, east cols
+            pl.BlockSpec((w, w), lambda i, ex: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((nc, 1, rho, rho), lambda i, tbl: (0, i, 0, 0)),
+        out_specs=blk(nc, 1, rho, rho),
     )
-
-    # corner args are the DIAGONAL neighbor's opposite corner: e.g. my NW
-    # halo cell is the NW neighbor's SE corner, hence c_se @ tbl[:, NW]
     out = pl.pallas_call(
-        functools.partial(_fused_kernel, workload),
+        functools.partial(_fused_k_kernel, workload, k),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((nc, nb, rho, rho), workload.dtype),
         interpret=interpret,
-    )(table, s, top, bot, west, east,
-      c_se, c_sw, c_ne, c_nw, jnp.asarray(layout.micro_mask))
+    )(existence, s, top, bot, west, east, wmask)
     return out if chan else out[0]
 
 
@@ -311,18 +507,18 @@ def _stencil_step_fused(layout: BlockLayout, state: jnp.ndarray,
 # legacy game-of-life entry points (kept for the original call sites)
 # ======================================================================
 def life_step_blocks(layout: BlockLayout, state: jnp.ndarray, *,
-                     interpret: bool = True) -> jnp.ndarray:
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
     """One GoL step; state (n_blocks, rho, rho) uint8 -> same."""
     return stencil_step_blocks(layout, state, LIFE, interpret=interpret)
 
 
 def life_step_strips(layout: BlockLayout, state: jnp.ndarray, *,
-                     interpret: bool = True) -> jnp.ndarray:
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
     """One GoL step, v2 (strip halos); state (n_blocks, rho, rho) uint8."""
     return stencil_step_strips(layout, state, LIFE, interpret=interpret)
 
 
 def life_step_fused(layout: BlockLayout, state: jnp.ndarray, *,
-                    interpret: bool = True) -> jnp.ndarray:
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
     """One GoL step, v3 (in-kernel strip reads)."""
     return stencil_step_fused(layout, state, LIFE, interpret=interpret)

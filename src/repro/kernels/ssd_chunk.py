@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
+
 Array = jnp.ndarray
 
 
@@ -66,10 +68,13 @@ def _ssd_chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
 @functools.partial(jax.jit,
                    static_argnames=("chunk", "interpret"))
 def ssd_chunk_scan(x: Array, dt: Array, a: Array, bm: Array, cm: Array, *,
-                   chunk: int = 128, interpret: bool = True) -> Array:
+                   chunk: int = 128, interpret=None) -> Array:
     """Full SSD scan: Pallas intra-chunk kernel + XLA inter-chunk
     recurrence. x (B,S,H,P); dt (B,S,H) fp32 post-softplus; a (H,)
-    negative; bm/cm (B,S,N) (n_groups=1). Returns (B,S,H,P) fp32."""
+    negative; bm/cm (B,S,N) (n_groups=1). Returns (B,S,H,P) fp32.
+    ``interpret=None`` auto-detects (compiled on TPU, interpreter
+    elsewhere)."""
+    interpret = resolve_interpret(interpret)
     b, s, h, p = x.shape
     n = bm.shape[-1]
     pad = (-s) % chunk

@@ -91,8 +91,55 @@ class StencilWorkload:
         agg = weighted_moore_agg(padded, self.weights2d, self.agg_dtype)
         return self.apply(center, agg, mask)
 
+    def tile_rule_k(self, padded: Array, halo_mask, k: int) -> Array:
+        """``k`` fused updates on a depth-``k`` padded tile (temporal
+        blocking). ``padded`` is (C?, h+2k, w+2k); each substep updates the
+        current window's interior and the window shrinks by one ring, so
+        after ``k`` substeps the (C?, h, w) core has advanced ``k`` exact
+        steps. ``halo_mask`` is the {0,1} occupancy of the *whole* window
+        (trailing (h+2k, w+2k) axes; leading axes broadcast) or None; it is
+        re-applied at every substep on a matching shrinking crop — halo
+        cells belong to neighbor tiles whose holes/ghosts must stay zero
+        mid-flight, not just at the final write."""
+        cur = padded
+        for _ in range(k):
+            center = cur[..., 1:-1, 1:-1]
+            agg = weighted_moore_agg(cur, self.weights2d, self.agg_dtype)
+            if halo_mask is not None:
+                halo_mask = halo_mask[..., 1:-1, 1:-1]
+            cur = self.apply(center, agg, halo_mask)
+        return cur
+
     def masked(self, state: Array, mask) -> Array:
         return state if mask is None else state * mask.astype(state.dtype)
+
+
+#: which pieces of a Moore halo a single radius-1 update actually reads:
+#: edge strips (rows N/S, cols W/E) and the four corner cells.
+HaloNeeds = Tuple[bool, ...]
+
+
+def halo_needs(weights) -> "HaloNeeds":
+    """(need_n, need_s, need_w, need_e, need_nw, need_ne, need_sw, need_se)
+    for one radius-1 Moore update with the given ``weights2d``.
+
+    A corner halo cell is read only by the matching diagonal shift, so a
+    zero diagonal weight makes that gather dead; an edge strip is read by
+    its orthogonal shift *and* both adjacent diagonal shifts, so it is dead
+    only when all three weights are zero (HeatDiffusion: 4 orthogonal
+    strips gathered, 4 corner gathers skipped). Single-step (k=1) kernels
+    only — a fused k>=2 substep chain propagates corner values inward even
+    under orthogonal-only weights.
+    """
+    w = dict(zip(MOORE_DIRS, weights))
+    need_nw, need_ne = w[(-1, -1)] != 0, w[(1, -1)] != 0
+    need_sw, need_se = w[(-1, 1)] != 0, w[(1, 1)] != 0
+    need_n = need_nw or need_ne or w[(0, -1)] != 0
+    need_s = need_sw or need_se or w[(0, 1)] != 0
+    need_w = need_nw or need_sw or w[(-1, 0)] != 0
+    need_e = need_ne or need_se or w[(1, 0)] != 0
+    return (need_n, need_s, need_w, need_e,
+            need_nw, need_ne, need_sw, need_se)
 
 
 def check_workload_ndim(workload: "StencilWorkload", ndim: int):

@@ -2,11 +2,19 @@
 
 Serving many concurrent fractal simulations means many independent initial
 states over a small set of static configurations ``(engine kind, fractal,
-r, m, workload)``. This module provides the building block:
+r, m, workload, k)``. This module provides the building block:
 
   * one compiled step per static configuration, vmapped over a leading
     batch axis of independent states (B simulations advance in one XLA
     call);
+  * fused multi-step serving: ``run`` tiles the step count into
+    floor(steps/k) vmapped k-step launches (temporal fusion over the
+    engines' depth-k halos) plus a single-step remainder; ``k`` is part of
+    the cache key (None resolves to the static heuristic, so the default
+    and an equal explicit depth share one entry);
+  * zero-copy steady-state stepping: ``run(..., donate=True)`` routes
+    through a ``donate_argnums`` jit so XLA reuses the incoming batch
+    buffer for the output (the caller must not touch the input after);
   * an LRU cache of those compiled engines keyed by the static tuple, so
     a serving process pays tracing/compilation once per configuration, not
     once per request;
@@ -33,9 +41,13 @@ if TYPE_CHECKING:  # annotation-only; keeps runtime free of core imports
 Array = jnp.ndarray
 
 #: static configuration of one simulation family:
-#: (kind, fractal, r, m, workload). The fractal stays ``Hashable`` here so
-#: this module needs nothing from ``repro.core`` at import time.
-Key = Tuple[str, Hashable, int, int, StencilWorkload]
+#: (kind, fractal, r, m, workload, k). The fractal stays ``Hashable`` here
+#: so this module needs nothing from ``repro.core`` at import time.
+Key = Tuple[str, Hashable, int, int, StencilWorkload, int]
+
+#: engine kinds with block tiles (these support temporal fusion; for the
+#: rest k normalizes to 1 so equal configurations share a cache slot)
+_BLOCK_KINDS_PREFIX = ("block", "pallas")
 
 
 @dataclasses.dataclass
@@ -50,10 +62,12 @@ class _Entry:
     engine: object
     batched_step: callable
     batched_run: callable
+    batched_run_donated: callable
 
 
 class BatchedRunner:
-    """LRU cache of compiled batched engines over (kind, frac, r, m, wl)."""
+    """LRU cache of compiled batched engines over (kind, frac, r, m, wl, k).
+    """
 
     def __init__(self, capacity: int = 16):
         if capacity < 1:
@@ -63,32 +77,66 @@ class BatchedRunner:
         self._cache: "OrderedDict[Key, _Entry]" = OrderedDict()
 
     # ------------------------------------------------------------- cache
+    def _resolve_k(self, kind: str, frac: NBBFractal, m: int,
+                   k: Optional[int]) -> int:
+        """Concrete fusion depth for the cache key: non-block kinds have
+        nothing to fuse (-> 1); None resolves to the static heuristic so
+        the default and an equal explicit k share one compiled entry."""
+        if k is not None and k < 1:
+            raise ValueError(f"fusion depth k must be >= 1, got {k}")
+        if not kind.startswith(_BLOCK_KINDS_PREFIX):
+            return 1
+        if k is None:
+            from repro.core.stencil import default_fusion_k
+            return default_fusion_k(frac.s ** m)
+        return k
+
     def _get(self, kind: str, frac: NBBFractal, r: int, m: int,
-             workload: StencilWorkload) -> _Entry:
+             workload: StencilWorkload, k: Optional[int] = None) -> _Entry:
         if kind == "pallas":  # make_engine's alias; one cache slot, not two
             kind = "pallas-strips"
-        key: Key = (kind, frac, r, m, workload)
+        k = self._resolve_k(kind, frac, m, k)
+        key: Key = (kind, frac, r, m, workload, k)
         entry = self._cache.get(key)
         if entry is not None:
             self._cache.move_to_end(key)
             return entry
         from repro.core.stencil import make_engine
-        engine = make_engine(kind, frac, r, m, workload=workload)
+        is_block = kind.startswith(_BLOCK_KINDS_PREFIX)
+        # the resolved k always becomes the engine's fusion depth on block
+        # kinds — an explicit k=1 must mean "no fusion", not "heuristic"
+        engine = make_engine(kind, frac, r, m, workload=workload,
+                             fusion_k=k if is_block else None)
+        fused = is_block and k > 1
         stats = self.stats
 
         def traced_step(state):
             stats.traces += 1  # runs only while tracing; cached calls skip it
             return engine.step(state)
 
+        def traced_step_k(state):
+            stats.traces += 1
+            return engine.step_k(state, k)
+
         batched_step = jax.jit(jax.vmap(traced_step))
 
-        @jax.jit
-        def batched_run(states, steps):
+        def _run(states, steps):
             body = jax.vmap(traced_step)
+            if fused:
+                body_k = jax.vmap(traced_step_k)
+                states = jax.lax.fori_loop(
+                    0, steps // k, lambda _, s: body_k(s), states)
+                return jax.lax.fori_loop(
+                    0, steps % k, lambda _, s: body(s), states)
             return jax.lax.fori_loop(
                 0, steps, lambda _, s: body(s), states)
 
-        entry = _Entry(engine, batched_step, batched_run)
+        if fused and kind == "block":
+            # XLA step_k tables, outside traces; the pallas kinds build
+            # their (smaller) v4 set in the kernel entry point
+            engine.layout.materialize_halo(k)
+        entry = _Entry(engine, batched_step, jax.jit(_run),
+                       jax.jit(_run, donate_argnums=0))
         self._cache[key] = entry
         stats.builds += 1
         if len(self._cache) > self.capacity:
@@ -97,9 +145,10 @@ class BatchedRunner:
         return entry
 
     def engine_for(self, kind: str, frac: NBBFractal, r: int, m: int = 0,
-                   workload: StencilWorkload = LIFE):
+                   workload: StencilWorkload = LIFE,
+                   k: Optional[int] = None):
         """The (cached) underlying single-simulation engine."""
-        return self._get(kind, frac, r, m, workload).engine
+        return self._get(kind, frac, r, m, workload, k).engine
 
     def cache_size(self) -> int:
         return len(self._cache)
@@ -119,11 +168,18 @@ class BatchedRunner:
 
     def run(self, kind: str, frac: NBBFractal, r: int, states: Array,
             steps: int, m: int = 0,
-            workload: StencilWorkload = LIFE) -> Array:
-        """``steps`` steps of B independent simulations. ``steps`` is a
-        dynamic fori_loop bound: changing it does not retrace."""
-        entry = self._get(kind, frac, r, m, workload)
-        return entry.batched_run(states, jnp.asarray(steps, jnp.int32))
+            workload: StencilWorkload = LIFE,
+            k: Optional[int] = None, donate: bool = False) -> Array:
+        """``steps`` steps of B independent simulations, tiled into
+        floor(steps/k) fused k-step launches plus a steps%k single-step
+        remainder (``k=None``: the engine heuristic; non-block kinds step
+        singly). ``steps`` is a dynamic fori_loop bound: changing it does
+        not retrace. ``donate=True`` hands the ``states`` buffer to XLA
+        for in-place reuse — zero-copy steady-state stepping; the caller
+        must not use ``states`` afterwards."""
+        entry = self._get(kind, frac, r, m, workload, k)
+        fn = entry.batched_run_donated if donate else entry.batched_run
+        return fn(states, jnp.asarray(steps, jnp.int32))
 
     def to_expanded(self, kind: str, frac: NBBFractal, r: int,
                     states: Array, m: int = 0,

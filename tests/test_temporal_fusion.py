@@ -1,0 +1,305 @@
+"""Temporal fusion (k-step deep-halo stepping) across the stack.
+
+Covers: depth-k halo geometry vs expanded-space windows (tables, masks,
+pad), fused k-step parity vs k single steps for every workload x block
+engine x k in {1, 2, 3} (bit-exact for CA, allclose for the PDE
+workloads), the remainder path (steps % k != 0), the k > rho multi-ring
+XLA path across block-level holes, buffer donation (zero-copy stepping),
+the fusion-depth heuristic/override, zero-weight gather skipping, and the
+batched runner's fused run + k cache-key component.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fractals
+from repro.core.compact import BlockLayout
+from repro.core.stencil import default_fusion_k, make_engine
+from repro.kernels import squeeze_stencil as sk
+from repro.workloads import (GRAY_SCOTT, HEAT, HIGHLIFE, LIFE, BatchedRunner)
+from repro.workloads.base import MOORE_DIRS, halo_needs
+
+ALL_WORKLOADS = [LIFE, HIGHLIFE, HEAT, GRAY_SCOTT]
+WL_IDS = [w.name for w in ALL_WORKLOADS]
+
+CASES = [
+    (fractals.SIERPINSKI, 5, 2),   # rho = 4
+    (fractals.CARPET, 3, 1),       # rho = 3, holes at block level
+]
+CASE_IDS = [f"{f.name}-r{r}-m{m}" for f, r, m in CASES]
+
+
+def _tol(wl):
+    return dict(rtol=0, atol=0) if wl.dtype == jnp.uint8 \
+        else dict(rtol=1e-5, atol=1e-5)
+
+
+def _single_steps(eng, state, n):
+    for _ in range(n):
+        state = eng.step(state)
+    return state
+
+
+# ------------------------------------------------------ depth-k geometry
+@pytest.mark.parametrize("frac,r,m", CASES, ids=CASE_IDS)
+def test_pad_with_halo_k_depth1_matches_pad_with_halo(frac, r, m):
+    layout = BlockLayout(frac, r, m)
+    rng = np.random.default_rng(0)
+    s = jnp.asarray(
+        rng.integers(0, 7, (layout.n_blocks, layout.rho, layout.rho))
+        .astype(np.float32) * np.asarray(layout.micro_mask))
+    np.testing.assert_array_equal(np.asarray(layout.pad_with_halo_k(s, 1)),
+                                  np.asarray(layout.pad_with_halo(s)))
+
+
+@pytest.mark.parametrize("frac,r,m", CASES, ids=CASE_IDS)
+@pytest.mark.parametrize("k", [1, 2, 5])
+def test_halo_geometry_matches_expanded_windows(frac, r, m, k):
+    """halo_mask(k) and pad_with_halo_k(s, k) must equal the depth-k
+    window around each block cut from zero-padded expanded space — at
+    every depth, including k > rho (multi-ring offset tables) and across
+    out-of-fractal (ghost) regions."""
+    layout = BlockLayout(frac, r, m)
+    rho = layout.rho
+    rng = np.random.default_rng(1)
+    s = jnp.asarray(
+        rng.integers(0, 9, (layout.n_blocks, rho, rho)).astype(np.float32)
+        * np.asarray(layout.micro_mask))
+    mask_pad = np.pad(np.asarray(frac.mask(r)), k)
+    state_pad = np.pad(np.asarray(layout.to_expanded(s)), k)
+    hmask = layout.halo_mask(k)
+    padded = np.asarray(layout.pad_with_halo_k(s, k))
+    for b, (ox, oy) in enumerate(layout.block_origin_expanded):
+        np.testing.assert_array_equal(
+            hmask[b], mask_pad[oy:oy + rho + 2 * k, ox:ox + rho + 2 * k],
+            err_msg=f"halo_mask block {b}")
+        np.testing.assert_array_equal(
+            padded[b], state_pad[oy:oy + rho + 2 * k, ox:ox + rho + 2 * k],
+            err_msg=f"pad_with_halo_k block {b}")
+
+
+def test_offset_table_depth1_is_neighbor_table():
+    layout = BlockLayout(fractals.SIERPINSKI, 5, 2)
+    assert layout.halo_offsets(layout.rho) == MOORE_DIRS
+    np.testing.assert_array_equal(layout.offset_table(2),
+                                  layout.neighbor_table)
+
+
+# ------------------------------------------------- fused k-step parity
+@pytest.mark.parametrize("frac,r,m", CASES, ids=CASE_IDS)
+@pytest.mark.parametrize("wl", ALL_WORKLOADS, ids=WL_IDS)
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_block_step_k_matches_single_steps(frac, r, m, wl, k):
+    eng = make_engine("block", frac, r, m, workload=wl)
+    s = eng.init_random(seed=5)
+    np.testing.assert_allclose(
+        np.asarray(eng.step_k(s, k)), np.asarray(_single_steps(eng, s, k)),
+        **_tol(wl), err_msg=f"block/{wl.name}/k={k}")
+
+
+@pytest.mark.parametrize("frac,r,m", CASES, ids=CASE_IDS)
+@pytest.mark.parametrize("wl", ALL_WORKLOADS, ids=WL_IDS)
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_pallas_fused_k_kernel_matches_single_steps(frac, r, m, wl, k):
+    layout = BlockLayout(frac, r, m)
+    eng = make_engine("block", frac, r, m, workload=wl)
+    s = eng.init_random(seed=5)
+    got = sk.stencil_step_fused_k(layout, s, wl, k=k, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(_single_steps(eng, s, k)),
+        **_tol(wl), err_msg=f"pallas-v4/{wl.name}/k={k}")
+
+
+@pytest.mark.parametrize("kind", ["block", "pallas-strips"])
+@pytest.mark.parametrize("wl", [LIFE, GRAY_SCOTT],
+                         ids=["life", "gray-scott"])
+@pytest.mark.parametrize("k,steps", [(2, 5), (3, 4)])
+def test_fused_run_remainder_path(kind, wl, k, steps):
+    """run() tiles steps into floor(steps/k) fused launches + steps % k
+    single steps; parity must hold when the remainder is nonempty."""
+    frac, r, m = fractals.SIERPINSKI, 5, 2
+    eng = make_engine(kind, frac, r, m, workload=wl, fusion_k=k)
+    assert eng.effective_fusion_k == k
+    s = eng.init_random(seed=9)
+    np.testing.assert_allclose(
+        np.asarray(eng.run(s, steps)),
+        np.asarray(_single_steps(eng, s, steps)),
+        **_tol(wl), err_msg=f"{kind}/{wl.name}/k={k}/steps={steps}")
+
+
+def test_step_k_beyond_rho_multi_ring():
+    """k > rho on a fractal with block-level holes: the depth-k offset
+    tables must resolve blocks *beyond* a ghost (hole) block exactly, not
+    compose through it."""
+    frac, r, m = fractals.CARPET, 3, 1       # rho = 3
+    eng = make_engine("block", frac, r, m, workload=LIFE)
+    s = eng.init_random(seed=2)
+    for k in (4, 7):                         # kb = 2 and 3 block rings
+        np.testing.assert_array_equal(
+            np.asarray(eng.step_k(s, k)),
+            np.asarray(_single_steps(eng, s, k)), err_msg=f"k={k}")
+
+
+def test_pallas_fused_k_rejects_k_beyond_rho():
+    layout = BlockLayout(fractals.CARPET, 3, 1)  # rho = 3
+    eng = make_engine("block", fractals.CARPET, 3, 1, workload=LIFE)
+    s = eng.init_random(seed=1)
+    with pytest.raises(ValueError, match="k <= rho"):
+        sk.stencil_step_fused_k(layout, s, LIFE, k=4, interpret=True)
+    with pytest.raises(ValueError, match="fusion_k"):
+        make_engine("pallas-strips", fractals.CARPET, 3, 1,
+                    workload=LIFE, fusion_k=4)
+
+
+# ------------------------------------------------- heuristic / override
+def test_default_fusion_k_heuristic():
+    assert default_fusion_k(1) == 1          # no room for a halo ring
+    assert default_fusion_k(3) == 2
+    assert default_fusion_k(4) == 2
+    assert default_fusion_k(8) == 3
+    assert default_fusion_k(27) == 3
+    for rho in (1, 2, 3, 4, 8, 9, 27):
+        assert 1 <= default_fusion_k(rho) <= rho
+
+
+def test_engine_fusion_k_override():
+    frac, r, m = fractals.SIERPINSKI, 5, 2   # rho = 4 -> heuristic k = 2
+    assert make_engine("block", frac, r, m).effective_fusion_k == 2
+    assert make_engine("block", frac, r, m,
+                       fusion_k=3).effective_fusion_k == 3
+    assert make_engine("pallas-strips", frac, r, m,
+                       fusion_k=1).effective_fusion_k == 1
+    with pytest.raises(ValueError, match="fusion_k"):
+        make_engine("block", frac, r, m, fusion_k=0)
+
+
+# ------------------------------------------------------ zero-weight skip
+def test_halo_needs_per_workload():
+    # LIFE reads everything; HEAT (orthogonal-only) never reads corners
+    assert halo_needs(LIFE.weights2d) == (True,) * 8
+    assert halo_needs(HEAT.weights2d) == (True, True, True, True,
+                                          False, False, False, False)
+    assert halo_needs(GRAY_SCOTT.weights2d) == (True,) * 8
+    # a corner weight alone keeps its two adjacent edge strips alive
+    w = {d: 0 for d in MOORE_DIRS}
+    w[(-1, -1)] = 1
+    needs = halo_needs(tuple(w[d] for d in MOORE_DIRS))
+    assert needs == (True, False, True, False, True, False, False, False)
+
+
+def test_strips_gather_skips_zero_weight_corners():
+    """With HEAT's needs, the v2 halo tensor's corner entries are constant
+    zeros (not gathered) while edge strips still carry neighbor data —
+    and kernel parity holds regardless (covered by test_workloads)."""
+    layout = BlockLayout(fractals.SIERPINSKI, 5, 2)
+    rho = layout.rho
+    s = jnp.ones((1, layout.n_blocks, rho, rho), jnp.float32)
+    full = np.asarray(sk._gather_halo_strips(layout, s))
+    skip = np.asarray(sk._gather_halo_strips(layout, s,
+                                             halo_needs(HEAT.weights2d)))
+    # rows 0/1 of the halo tensor are top/bottom incl. corner cells
+    assert skip[:, :, 0, 0].max() == 0 and skip[:, :, 0, -1].max() == 0
+    assert skip[:, :, 1, 0].max() == 0 and skip[:, :, 1, -1].max() == 0
+    # interior of the strips is untouched by the skip
+    np.testing.assert_array_equal(skip[:, :, 0, 1:-1], full[:, :, 0, 1:-1])
+    np.testing.assert_array_equal(skip[:, :, 2, :rho], full[:, :, 2, :rho])
+    # some real corner data existed, so the zeroing is the skip's doing
+    assert full[:, :, 0, 0].max() > 0
+
+
+# ------------------------------------------------------------- donation
+def _donation_supported() -> bool:
+    f = jax.jit(lambda x: x + 1.0, donate_argnums=0)
+    x = jnp.zeros(16)
+    f(x)
+    return x.is_deleted()
+
+
+def test_donated_run_consumes_input():
+    if not _donation_supported():
+        pytest.skip("backend does not implement buffer donation")
+    eng = make_engine("block", fractals.SIERPINSKI, 5, 2, workload=HEAT)
+    s = eng.init_random(seed=3)
+    # NB: np.asarray(s) would be a zero-copy view pinning the buffer and
+    # silently blocking donation — copy explicitly
+    keep = np.array(s, copy=True)
+    ref = _single_steps(eng, s, 4)
+    out = eng.run(s, 4, donate=True)
+    assert s.is_deleted()                    # zero-copy: input was consumed
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    # non-donated run leaves the input alive
+    s2 = jnp.asarray(keep)
+    eng.run(s2, 4)
+    assert not s2.is_deleted()
+
+
+def test_donated_stepping_no_alloc_growth():
+    """Steady-state donated stepping must not accumulate live buffers:
+    every fused launch consumes its input and produces one output."""
+    if not _donation_supported():
+        pytest.skip("backend does not implement buffer donation")
+    eng = make_engine("block", fractals.SIERPINSKI, 5, 2, workload=HEAT)
+    s = eng.run(eng.init_random(seed=4), 2, donate=True)  # warm the jit
+    jax.block_until_ready(s)
+    base = len(jax.live_arrays())
+    for _ in range(6):
+        s = eng.run(s, 2, donate=True)
+    jax.block_until_ready(s)
+    assert len(jax.live_arrays()) <= base
+
+
+# ------------------------------------------------------- batched runner
+def test_runner_fused_run_matches_loop():
+    frac, r = fractals.SIERPINSKI, 5
+    runner = BatchedRunner()
+    for kind, m, wl, k in [("block", 2, GRAY_SCOTT, 2),
+                           ("block", 2, LIFE, 3),
+                           ("pallas-strips", 2, HEAT, 2)]:
+        states = runner.init_batch(kind, frac, r, seeds=range(3), m=m,
+                                   workload=wl)
+        ran = runner.run(kind, frac, r, states, steps=5, m=m, workload=wl,
+                        k=k)
+        eng = runner.engine_for(kind, frac, r, m=m, workload=wl, k=k)
+        for b in range(states.shape[0]):
+            np.testing.assert_allclose(
+                np.asarray(ran[b]),
+                np.asarray(_single_steps(eng, states[b], 5)), **_tol(wl),
+                err_msg=f"{kind}/{wl.name}/k={k} batch {b}")
+
+
+def test_runner_cache_key_includes_k():
+    frac, r, m = fractals.SIERPINSKI, 5, 2
+    runner = BatchedRunner()
+    e_default = runner.engine_for("block", frac, r, m=m, workload=LIFE)
+    # the heuristic depth (rho=4 -> 2) and an equal explicit k share a slot
+    assert runner.engine_for("block", frac, r, m=m, workload=LIFE,
+                             k=2) is e_default
+    assert runner.stats.builds == 1
+    # a different fusion depth is a different compiled configuration
+    e3 = runner.engine_for("block", frac, r, m=m, workload=LIFE, k=3)
+    assert e3 is not e_default and e3.fusion_k == 3
+    assert runner.stats.builds == 2
+    # non-block kinds normalize k away entirely (one slot, no fusion)
+    runner.engine_for("cell", frac, r, workload=LIFE)
+    runner.engine_for("cell", frac, r, workload=LIFE, k=5)
+    assert runner.stats.builds == 3
+    with pytest.raises(ValueError, match="k must be >= 1"):
+        runner.engine_for("block", frac, r, m=m, workload=LIFE, k=0)
+
+
+def test_runner_donated_run():
+    if not _donation_supported():
+        pytest.skip("backend does not implement buffer donation")
+    frac, r, m = fractals.SIERPINSKI, 5, 2
+    runner = BatchedRunner()
+    states = runner.init_batch("block", frac, r, seeds=range(4), m=m,
+                               workload=HEAT)
+    ref = runner.run("block", frac, r, states, steps=4, m=m, workload=HEAT)
+    out = runner.run("block", frac, r, states, steps=4, m=m, workload=HEAT,
+                     donate=True)
+    assert states.is_deleted()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
