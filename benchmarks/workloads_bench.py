@@ -153,6 +153,97 @@ def bench_fusion(frac, r: int, m: int, iters: int, out_path: str) -> None:
                         for _, e, w, k, x in speedups))
 
 
+# ---------------------------------------------------------------- v5 MXU
+MXU_WORKLOADS = (LIFE, HEAT, GRAY_SCOTT)
+
+
+def bench_mxu_one(runner, kind, frac, r, m, wl, k, batch, steps, iters):
+    states = runner.init_batch(kind, frac, r, seeds=range(batch), m=m,
+                               workload=wl)
+    us = time_fn(
+        lambda s: runner.run(kind, frac, r, s, steps=steps, m=m,
+                             workload=wl, k=k),
+        states, iters=iters) / steps
+    cells = frac.volume(r) * batch
+    rho = frac.s ** m
+    rec = {
+        "workload": wl.name, "engine": kind, "fractal": frac.name,
+        "r": r, "m": m, "rho": rho, "k": k if k is not None else "auto",
+        "batch": batch, "us_per_step": us,
+        "cells": cells, "mcells_per_s": cells / us,
+    }
+    emit(f"mxu/{wl.name}/{kind}/rho{rho}/b{batch}/k{rec['k']}", us,
+         f"r={r};mcups={rec['mcells_per_s']:.1f}")
+    return rec
+
+
+def bench_mxu(frac, r, ms, iters, batches, out_path) -> None:
+    """v5 (pallas-mxu, stencil-as-matmul macro-tiles + native batch grid)
+    vs v2/v4 (pallas-strips single-step / fused-k) across rho and batch
+    size. Per configuration, step-for-step parity between the two kinds
+    is asserted first (bit-exact for CA, 1e-5 for the PDE workloads);
+    after writing the JSON the speedup gate *fails the process* unless
+    the geometric-mean pallas-mxu speedup over pallas-strips across the
+    batched (B >= 8) configurations at rho <= 9 reaches 1.5x mcells/s —
+    the acceptance bar for the MXU path on the serving-shaped workloads
+    (see DESIGN.md Section 2.2; individual configurations are printed so
+    a single-cell regression is still visible in the CI log).
+    """
+    iters = max(iters, 10)
+    steps = 6
+    records = []
+    for m in ms:
+        if m > r:
+            continue
+        for wl in MXU_WORKLOADS:
+            for batch in batches:
+                runner = BatchedRunner()  # fresh cache per config: honest
+                states = runner.init_batch("pallas-strips", frac, r,
+                                           seeds=range(batch), m=m,
+                                           workload=wl)
+                want = runner.run("pallas-strips", frac, r, states,
+                                  steps=steps, m=m, workload=wl)
+                got = runner.run("pallas-mxu", frac, r, states,
+                                 steps=steps, m=m, workload=wl)
+                np.testing.assert_allclose(
+                    np.asarray(got), np.asarray(want), **_tol(wl),
+                    err_msg=f"mxu parity broke: {wl.name}/m={m}/b={batch}")
+                for kind in ("pallas-strips", "pallas-mxu"):
+                    records.append(bench_mxu_one(
+                        runner, kind, frac, r, m, wl, None, batch, steps,
+                        iters))
+    out = pathlib.Path(out_path)
+    out.write_text(json.dumps({
+        "fractal": frac.name, "r": r, "ms": list(ms),
+        "batches": list(batches), "backend": jax.default_backend(),
+        "records": records}, indent=2))
+    print(f"wrote {out} ({len(records)} records)")
+    # JSON first, so a regression still leaves the timings behind
+    speedups, gated = [], []
+    for rec in records:
+        if rec["engine"] != "pallas-mxu":
+            continue
+        base = next(b for b in records
+                    if b["engine"] == "pallas-strips"
+                    and b["workload"] == rec["workload"]
+                    and b["m"] == rec["m"] and b["batch"] == rec["batch"])
+        x = rec["mcells_per_s"] / base["mcells_per_s"]
+        speedups.append((rec, x))
+        if rec["rho"] <= 9 and rec["batch"] >= 8:
+            gated.append(x)
+    for rec, x in speedups:
+        print(f"mxu speedup {rec['workload']}/rho{rec['rho']}"
+              f"/b{rec['batch']}: {x:.2f}x")
+    if gated:
+        geomean = float(np.exp(np.mean(np.log(gated))))
+        print(f"mxu gate: geomean over batched rho<=9 = {geomean:.2f}x "
+              f"({len(gated)} configs)")
+        if geomean < 1.5:
+            raise SystemExit(
+                f"pallas-mxu geomean speedup {geomean:.2f}x < 1.5x over "
+                "pallas-strips on batched rho<=9 configurations")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--r", type=int, default=9)
@@ -166,13 +257,26 @@ def main():
     ap.add_argument("--no-fusion", action="store_true",
                     help="skip the temporal-fusion k sweep (CI runs it "
                          "as its own step)")
+    ap.add_argument("--mxu-only", action="store_true",
+                    help="run only the v5 MXU vs strips sweep + gate "
+                         "(the CI MXU perf-gate step)")
+    ap.add_argument("--mxu-ms", type=int, nargs="+", default=None,
+                    help="block levels m for the MXU rho sweep "
+                         "(default: {m, m+1} clipped to r)")
+    ap.add_argument("--mxu-batches", type=int, nargs="+", default=(1, 8))
     ap.add_argument("--out", default="BENCH_workloads.json")
     ap.add_argument("--fusion-out", default="BENCH_fusion.json")
+    ap.add_argument("--mxu-out", default="BENCH_mxu.json")
     args = ap.parse_args()
     if args.smoke:
         args.r, args.m, args.iters = 5, 2, 2
 
     frac = fractals.SIERPINSKI
+    if args.mxu_only:
+        ms = args.mxu_ms or [m for m in (args.m, args.m + 1) if m <= args.r]
+        bench_mxu(frac, args.r, ms, args.iters, tuple(args.mxu_batches),
+                  args.mxu_out)
+        return
     if not args.fusion_only:
         records = []
         for wl in WORKLOADS:

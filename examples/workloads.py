@@ -27,3 +27,13 @@ for wl in (LIFE, HIGHLIFE, HEAT, GRAY_SCOTT):
 s = runner.stats
 print(f"compiled engines built: {s.builds} (one per workload), "
       f"traces: {s.traces} — each batch of {BATCH} sims shares one")
+
+# the v5 MXU path: same serving surface, but the whole batch advances
+# through ONE kernel dispatched over a (B, n_macro_tiles) grid — the
+# stencil runs as banded matmuls on lane-packed macro-tiles (DESIGN 2.2)
+states = runner.init_batch("pallas-mxu", SIERPINSKI, R, seeds=range(BATCH),
+                           m=M, workload=HEAT)
+states = runner.run("pallas-mxu", SIERPINSKI, R, states, steps=STEPS, m=M,
+                    workload=HEAT)
+print(f"pallas-mxu: {BATCH} sims x {STEPS} steps in batch-grid dispatches, "
+      f"mean field {float(jnp.mean(states)):.4f}")

@@ -19,6 +19,7 @@ import functools
 import math
 from typing import Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -80,14 +81,18 @@ class BlockLayout:
         __post_init__ so analytic uses (memory_bytes etc.) stay O(1)."""
         _ = self.micro_mask, self.block_coords
         _ = self.block_origin_expanded, self.neighbor_table
+        _ = self.dev_micro_mask, self.dev_block_origin_expanded
+        _ = self.dev_neighbor_table
         return self
 
     def materialize_halo(self, k: int) -> "BlockLayout":
         """Build the depth-``k`` halo geometry eagerly (same contract as
         ``materialize``: fused-k entry points call this outside any trace)."""
         self.materialize()
-        _ = self.existence_table
+        _ = self.existence_table, self.dev_existence_table
         _ = self.offset_table(k), self.window_mask(k), self.halo_mask(k)
+        _ = self.dev_offset_table(k), self.dev_window_mask(k)
+        _ = self.dev_halo_mask(k)
         return self
 
     @property
@@ -166,6 +171,55 @@ class BlockLayout:
         periodic window mask so ghost halo regions stay zero across
         substeps)."""
         return (self.neighbor_table != self.ghost).astype(np.int32)
+
+    # --------------------------------------------- device-side cached tables
+    # One upload per layout, shared by every kernel variant and every trace:
+    # jnp.asarray inside each jitted entry point would re-stage the host
+    # table per entry point per trace. Cached in __dict__, so dataclass
+    # hashing/equality (fields only) are untouched, and the buffers die
+    # with the layout (the runner's LRU can still evict). Builds run under
+    # ensure_compile_time_eval so a lazy first touch inside an outer jit
+    # trace still caches a *concrete* device array, never a tracer.
+    @staticmethod
+    def _to_device(host: np.ndarray) -> Array:
+        with jax.ensure_compile_time_eval():
+            return jax.device_put(host)
+
+    @functools.cached_property
+    def dev_neighbor_table(self) -> Array:
+        """Device-side ``neighbor_table`` (one shared upload)."""
+        return self._to_device(self.neighbor_table)
+
+    @functools.cached_property
+    def dev_micro_mask(self) -> Array:
+        """Device-side ``micro_mask`` (one shared upload)."""
+        return self._to_device(self.micro_mask)
+
+    @functools.cached_property
+    def dev_existence_table(self) -> Array:
+        """Device-side ``existence_table`` (one shared upload)."""
+        return self._to_device(self.existence_table)
+
+    @functools.cached_property
+    def dev_block_origin_expanded(self) -> Array:
+        """Device-side ``block_origin_expanded`` (one shared upload)."""
+        return self._to_device(self.block_origin_expanded)
+
+    def dev_offset_table(self, k: int) -> Array:
+        """Device-side ``offset_table(k)`` (one shared upload per depth)."""
+        return self._memo(("dev_offset_table", self.halo_block_radius(k)),
+                          lambda: self._to_device(self.offset_table(k)))
+
+    def dev_window_mask(self, k: int) -> Array:
+        """Device-side int32 ``window_mask(k)`` (shared upload per depth)."""
+        return self._memo(
+            ("dev_window_mask", k),
+            lambda: self._to_device(self.window_mask(k).astype(np.int32)))
+
+    def dev_halo_mask(self, k: int) -> Array:
+        """Device-side ``halo_mask(k)`` (one shared upload per depth)."""
+        return self._memo(("dev_halo_mask", k),
+                          lambda: self._to_device(self.halo_mask(k)))
 
     # ------------------------------------------------------- depth-k halos
     def halo_block_radius(self, k: int) -> int:
@@ -259,12 +313,48 @@ class BlockLayout:
             full[table[:, oi] == self.ghost, dy0:dy1, dx0:dx1] = 0
         return full
 
+    # -------------------------------------------- macro-tile strip geometry
+    def macro_tiles(self, k: int, lanes: int = 128) -> Tuple[int, int, int]:
+        """Lane-packing geometry of the v5 MXU kernel: ``(P, n_macro,
+        nb_pad)`` where ``P`` compact blocks (each a depth-``k`` padded
+        ``(rho+2k)``-wide slot) are packed side by side along the minor
+        (lane) axis of one macro-tile, chosen so ``P * (rho+2k)`` fills
+        the ``lanes``-wide vector registers, and ``n_macro = ceil(n_blocks
+        / P)`` macro-tiles cover the compact block domain. After the
+        ceiling split, ``P`` is rebalanced down to ``ceil(n_blocks /
+        n_macro)`` so padding slots (dead lanes) are minimized. ``nb_pad =
+        n_macro * P >= n_blocks``; slots past ``n_blocks`` are zero-filled
+        ghosts whose outputs are sliced off."""
+        if k < 1:
+            raise ValueError(f"halo depth must be >= 1, got {k}")
+        w = self.rho + 2 * k
+        nb = self.n_blocks
+        p = max(1, min(lanes // w, nb))
+        n_macro = -(-nb // p)
+        p = -(-nb // n_macro)  # rebalance: same tile count, fewer dead slots
+        return p, n_macro, n_macro * p
+
+    def existence_padded(self, k: int) -> np.ndarray:
+        """(nb_pad, 8) int32 ``existence_table`` zero-padded to the macro
+        slot count: padding slots have no real neighbors, so their halo
+        regions stay ghost-gated to zero in the v5 kernel."""
+        def build():
+            _, _, nb_pad = self.macro_tiles(k)
+            pad = np.zeros((nb_pad - self.n_blocks, 8), np.int32)
+            return np.concatenate([self.existence_table, pad], axis=0)
+        return self._memo(("existence_padded", k), build)
+
+    def dev_existence_padded(self, k: int) -> Array:
+        """Device-side ``existence_padded(k)`` (shared upload per depth)."""
+        return self._memo(("dev_existence_padded", k),
+                          lambda: self._to_device(self.existence_padded(k)))
+
     # ------------------------------------------------------------ conversions
     def to_expanded(self, state_b: Array) -> Array:
         """Block state (C?, n_blocks, rho, rho) -> (C?, n, n) expanded
         embedding (leading channel axes pass through)."""
         n = self.frac.side(self.r)
-        org = jnp.asarray(self.block_origin_expanded)  # (n_blocks, 2)
+        org = self.dev_block_origin_expanded  # (n_blocks, 2)
         rho = self.rho
         iy, ix = jnp.meshgrid(jnp.arange(rho), jnp.arange(rho), indexing="ij")
         # absolute cell coords per (block, i, j)
@@ -276,12 +366,12 @@ class BlockLayout:
     def from_expanded(self, state_e: Array) -> Array:
         """(C?, n, n) expanded embedding -> block state (C?, n_blocks,
         rho, rho)."""
-        org = jnp.asarray(self.block_origin_expanded)
+        org = self.dev_block_origin_expanded
         rho = self.rho
         iy, ix = jnp.meshgrid(jnp.arange(rho), jnp.arange(rho), indexing="ij")
         ax = org[:, 0, None, None] + ix[None]
         ay = org[:, 1, None, None] + iy[None]
-        mask = jnp.asarray(self.micro_mask)
+        mask = self.dev_micro_mask
         return state_e[..., ay, ax] * mask.astype(state_e.dtype)
 
     def pad_with_halo(self, state_b: Array) -> Array:
@@ -295,7 +385,7 @@ class BlockLayout:
         # one zero ghost block appended: sentinel gathers read zeros.
         padded_src = jnp.concatenate(
             [state_b, jnp.zeros((1, rho, rho), state_b.dtype)], axis=0)
-        table = jnp.asarray(self.neighbor_table)  # (nb, 8)
+        table = self.dev_neighbor_table  # (nb, 8)
 
         out = jnp.zeros((nb, rho + 2, rho + 2), state_b.dtype)
         out = out.at[:, 1:-1, 1:-1].set(state_b)
@@ -329,7 +419,7 @@ class BlockLayout:
             raise ValueError(f"halo depth must be >= 1, got {k}")
         rho, nb = self.rho, self.n_blocks
         w = rho + 2 * k
-        table = jnp.asarray(self.offset_table(k))
+        table = self.dev_offset_table(k)
         out = jnp.zeros((nb, w, w), state_b.dtype)
         out = out.at[:, k:k + rho, k:k + rho].set(state_b)
         for oi, (bdx, bdy) in enumerate(self.halo_offsets(k)):

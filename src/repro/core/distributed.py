@@ -107,7 +107,7 @@ def _tile_step(layout: BlockLayout, state: Array, halo: Array) -> Array:
                 continue
             counts += padded[:, 1 + dy:rho + 1 + dy, 1 + dx:rho + 1 + dx]
     nxt = life_rule(state, counts)
-    return nxt * jnp.asarray(layout.micro_mask)[None]
+    return nxt * layout.dev_micro_mask[None]
 
 
 @dataclasses.dataclass(frozen=True)

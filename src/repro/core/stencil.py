@@ -64,7 +64,26 @@ def default_fusion_k(rho: int) -> int:
     return 3 if rho >= 8 else 2
 
 
-class _FusedStepping:
+class _CachedRun:
+    """Cached-jit run machinery: hosts define ``_run_impl(state, steps)``
+    with a *traced* steps scalar, and their ``run`` dispatches through
+    ``_dispatch_run`` — one plain and one ``donate_argnums`` compilation
+    per engine value, neither retracing when the step count changes."""
+
+    @partial(jax.jit, static_argnums=0)
+    def _run(self, state: Array, steps) -> Array:
+        return self._run_impl(state, steps)
+
+    @partial(jax.jit, static_argnums=0, donate_argnums=1)
+    def _run_donated(self, state: Array, steps) -> Array:
+        return self._run_impl(state, steps)
+
+    def _dispatch_run(self, state: Array, steps, donate: bool) -> Array:
+        fn = self._run_donated if donate else self._run
+        return fn(state, jnp.asarray(steps, jnp.int32))
+
+
+class _FusedStepping(_CachedRun):
     """Temporal-fusion run machinery shared by the block engines.
 
     Hosts require a ``layout``, a ``fusion_k`` field, ``step(state)`` and
@@ -91,14 +110,6 @@ class _FusedStepping:
         return jax.lax.fori_loop(0, steps % k,
                                  lambda _, s: self.step(s), state)
 
-    @partial(jax.jit, static_argnums=0)
-    def _run(self, state: Array, steps) -> Array:
-        return self._run_impl(state, steps)
-
-    @partial(jax.jit, static_argnums=0, donate_argnums=1)
-    def _run_donated(self, state: Array, steps) -> Array:
-        return self._run_impl(state, steps)
-
     def run(self, state: Array, steps, donate: bool = False) -> Array:
         """``steps`` steps, tiled into floor(steps/k) fused k-step launches
         plus a steps%k single-step remainder (``steps`` stays a dynamic
@@ -108,12 +119,11 @@ class _FusedStepping:
         k = self.effective_fusion_k
         if k > 1:                 # the k<=1 path never touches halo tables
             self._materialize_fused(k)
-        fn = self._run_donated if donate else self._run
-        return fn(state, jnp.asarray(steps, jnp.int32))
+        return self._dispatch_run(state, steps, donate)
 
 
 @dataclasses.dataclass(frozen=True)
-class SqueezeCellEngine:
+class SqueezeCellEngine(_CachedRun):
     """Paper-faithful compact-space engine (thread-level Squeeze)."""
 
     frac: NBBFractal
@@ -150,8 +160,18 @@ class SqueezeCellEngine:
         # every compact cell is a fractal cell: no mask
         return wl.apply(state, agg, None).astype(state.dtype)
 
-    def run(self, state: Array, steps: int) -> Array:
+    def _run_impl(self, state: Array, steps) -> Array:
         return jax.lax.fori_loop(0, steps, lambda _, s: self.step(s), state)
+
+    def run(self, state: Array, steps, donate: bool = False) -> Array:
+        """``steps`` steps in one cached jit whose loop bound is a *traced*
+        scalar — changing the step count does not recompile (the old
+        bare ``fori_loop`` baked the Python int into the trace, so every
+        distinct count paid a full retrace). ``donate=True`` donates the
+        input state buffer to XLA (zero-copy steady-state stepping; the
+        caller must not reuse ``state`` afterwards) — same signature as
+        the block engines' ``run``."""
+        return self._dispatch_run(state, steps, donate)
 
     def memory_bytes(self, dtype_size: int = 1) -> int:
         rows, cols = self.frac.compact_dims(self.r)
@@ -202,7 +222,7 @@ class SqueezeBlockEngine(_FusedStepping):
             pad = jax.vmap(pad)  # over the leading channel axis
         padded = pad(state)  # (C?, nb, rho+2, rho+2)
         agg = weighted_moore_agg(padded, wl.weights2d, wl.agg_dtype)
-        mask = jnp.asarray(self.layout.micro_mask)  # broadcasts over C?, nb
+        mask = self.layout.dev_micro_mask  # broadcasts over C?, nb
         return wl.apply(state, agg, mask).astype(state.dtype)
 
     # ------------------------------------------------------ temporal fusion
@@ -223,7 +243,7 @@ class SqueezeBlockEngine(_FusedStepping):
         if wl.n_channels > 1:
             pad = jax.vmap(pad)  # over the leading channel axis
         padded = pad(state)  # (C?, nb, rho+2k, rho+2k)
-        hmask = jnp.asarray(self.layout.halo_mask(k))  # (nb, rho+2k, rho+2k)
+        hmask = self.layout.dev_halo_mask(k)  # (nb, rho+2k, rho+2k)
         return wl.tile_rule_k(padded, hmask, k).astype(state.dtype)
 
     def memory_bytes(self, dtype_size: int = 1) -> int:
@@ -235,12 +255,20 @@ class SqueezePallasEngine(_FusedStepping):
     """Block-level Squeeze with the step fused into a Pallas kernel.
 
     ``variant`` selects the halo strategy of kernels/squeeze_stencil.py:
-    'blocks' (v1, paper-shaped), 'strips' (v2, pre-gathered strip halos) or
-    'fused' (v3, in-kernel strip reads). State layout and conversions are
-    identical to ``SqueezeBlockEngine``. ``run`` steps through the v4
-    temporal-fusion kernel (``stencil_step_fused_k``) whenever the
-    effective fusion depth is > 1; ``fusion_k`` overrides the heuristic
-    but must stay <= rho (the kernel's one-block-ring limit).
+    'blocks' (v1, paper-shaped), 'strips' (v2, pre-gathered strip halos),
+    'fused' (v3, in-kernel strip reads) or 'mxu' (v5, stencil-as-matmul on
+    lane-packed macro-tiles). State layout and conversions are identical
+    to ``SqueezeBlockEngine``. ``run`` steps through the temporal-fusion
+    kernel (v4 ``stencil_step_fused_k``, or the v5 k-substep variant for
+    'mxu') whenever the effective fusion depth is > 1; ``fusion_k``
+    overrides the heuristic but must stay <= rho (the kernels'
+    one-block-ring limit).
+
+    The 'mxu' variant additionally supports *native batching*
+    (``step_batched`` / ``step_k_batched``): B independent simulations
+    advance through ONE kernel dispatch over a (B, n_macro_tiles) grid
+    instead of a vmap of per-simulation pallas_calls — the
+    ``BatchedRunner`` routes through it when ``supports_native_batch``.
     """
 
     layout: BlockLayout
@@ -249,7 +277,7 @@ class SqueezePallasEngine(_FusedStepping):
     fusion_k: Optional[int] = None
 
     def __post_init__(self):
-        if self.variant not in ("blocks", "strips", "fused"):
+        if self.variant not in ("blocks", "strips", "fused", "mxu"):
             raise ValueError(f"unknown Pallas variant {self.variant!r}")
         check_workload_ndim(self.workload, 2)
         if self.fusion_k is not None and not (
@@ -278,18 +306,48 @@ class SqueezePallasEngine(_FusedStepping):
         from repro.kernels import ops
         fn = {"blocks": ops.stencil_step_blocks,
               "strips": ops.stencil_step_strips,
-              "fused": ops.stencil_step_fused}[self.variant]
+              "fused": ops.stencil_step_fused,
+              "mxu": ops.stencil_step_mxu}[self.variant]
         return fn(self.layout, state, self.workload)
+
+    # ------------------------------------------------------- native batching
+    @property
+    def supports_native_batch(self) -> bool:
+        """True when B simulations step through one (B, n_macro) kernel
+        grid rather than a vmap of per-simulation pallas_calls."""
+        return self.variant == "mxu"
+
+    def step_batched(self, states: Array) -> Array:
+        """One step of B independent simulations in one kernel dispatch;
+        states (B, C?, n_blocks, rho, rho) -> same ('mxu' variant only)."""
+        return self.step_k_batched(states, 1)
+
+    def step_k_batched(self, states: Array, k: int) -> Array:
+        """``k`` exact steps of B independent simulations in one kernel
+        dispatch over the (B, n_macro_tiles) grid ('mxu' variant only)."""
+        if not self.supports_native_batch:
+            raise ValueError(
+                f"native batching needs variant='mxu', got {self.variant!r} "
+                "(use jax.vmap over step/step_k instead)")
+        from repro.kernels import ops
+        return ops.stencil_step_mxu_batched(self.layout, states,
+                                            self.workload, k=k)
 
     # ------------------------------------------------------ temporal fusion
     def _materialize_fused(self, k: int) -> None:
-        # only what the v4 kernel reads — not the XLA path's per-block
+        # only what the fused kernels read — not the XLA path's per-block
         # halo_mask/offset_table (O(n_blocks (rho+2k)^2) host build)
-        _ = self.layout.existence_table, self.layout.window_mask(k)
+        _ = self.layout.dev_existence_table, self.layout.dev_window_mask(k)
+        if self.variant == "mxu":
+            _ = self.layout.dev_existence_padded(k)
 
     def step_k(self, state: Array, k: int) -> Array:
-        """Advance ``k`` exact steps in one v4 kernel launch (k <= rho)."""
+        """Advance ``k`` exact steps in one fused kernel launch (k <= rho):
+        the v5 macro-tile kernel for 'mxu', the v4 kernel otherwise."""
         from repro.kernels import ops
+        if self.variant == "mxu":
+            return ops.stencil_step_mxu_k(self.layout, state, self.workload,
+                                          k=k)
         return ops.stencil_step_fused_k(self.layout, state, self.workload,
                                         k=k)
 
@@ -303,11 +361,17 @@ def make_engine(kind: str, frac: NBBFractal, r: int, m: int = 0,
     """Engine factory.
 
     kind: 'bb' | 'lambda' | 'cell' | 'block' | 'pallas-blocks' |
-          'pallas-strips' | 'pallas-fused' ('pallas' = 'pallas-strips').
+          'pallas-strips' | 'pallas-fused' | 'pallas-mxu'
+          ('pallas' = 'pallas-strips').
     ``m`` (block level, rho = s**m) and ``fusion_k`` (temporal-fusion
     depth for ``run``; None = heuristic) only apply to the block/pallas
     kinds — the expanded-space and cell engines have no block tiles to
-    fuse over.
+    fuse over. 'pallas-mxu' is the v5 stencil-as-matmul kernel: the Moore
+    aggregation runs as rank-1 banded MXU contractions on lane-packed
+    multi-block macro-tiles, and it is the only kind with a *native*
+    batch grid (``step_batched``; the ``BatchedRunner`` dispatches one
+    kernel over (B, n_macro_tiles) instead of vmapping pallas_call) —
+    see DESIGN.md Section 2.2 for when it beats 'pallas-strips'/v4.
     """
     from repro.core.baselines import LambdaEngine
     if kind == "bb":

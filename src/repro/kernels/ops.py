@@ -62,6 +62,30 @@ def stencil_step_fused_k(layout: BlockLayout, state, workload=LIFE, *,
                                          interpret=interpret)
 
 
+def stencil_step_mxu(layout: BlockLayout, state, workload=LIFE, *,
+                     interpret: Optional[bool] = None):
+    """Fused block-level workload step, v5 (MXU stencil-as-matmul on
+    lane-packed macro-tiles)."""
+    return _stencil.stencil_step_mxu(layout, state, workload,
+                                     interpret=interpret)
+
+
+def stencil_step_mxu_k(layout: BlockLayout, state, workload=LIFE, *,
+                       k: int = 2, interpret: Optional[bool] = None):
+    """Fused block-level workload step, v5 temporal fusion: k exact steps
+    per MXU macro-tile launch (k <= rho)."""
+    return _stencil.stencil_step_mxu_k(layout, state, workload, k=k,
+                                       interpret=interpret)
+
+
+def stencil_step_mxu_batched(layout: BlockLayout, states, workload=LIFE, *,
+                             k: int = 1, interpret: Optional[bool] = None):
+    """v5 native batch grid: B simulations x k exact steps in one kernel
+    dispatch over (B, n_macro_tiles); states (B, C?, n_blocks, rho, rho)."""
+    return _stencil.stencil_step_mxu_batched(layout, states, workload, k=k,
+                                             interpret=interpret)
+
+
 def life_step_blocks(layout: BlockLayout, state, *,
                      interpret: Optional[bool] = None):
     """Fused block-level GoL step, v1 (neighbor-block staging)."""
@@ -103,5 +127,6 @@ def flash_attention(q, k, v, *, causal: bool = True,
 __all__ = ["nu_map_tc", "lambda_map_tc", "life_step_blocks",
            "life_step_strips", "life_step_fused", "stencil_step_blocks",
            "stencil_step_strips", "stencil_step_fused",
-           "stencil_step_fused_k", "flash_attention",
-           "ssd_chunk_scan", "default_interpret"]
+           "stencil_step_fused_k", "stencil_step_mxu",
+           "stencil_step_mxu_k", "stencil_step_mxu_batched",
+           "flash_attention", "ssd_chunk_scan", "default_interpret"]

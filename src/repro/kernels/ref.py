@@ -34,7 +34,7 @@ def life_blocks_ref(layout: BlockLayout, state: Array) -> Array:
     padded = layout.pad_with_halo(state)
     counts = _moore_counts(padded)
     nxt = life_rule(state, counts)
-    return nxt * jnp.asarray(layout.micro_mask)[None]
+    return nxt * layout.dev_micro_mask[None]
 
 
 def stencil_blocks_ref(layout: BlockLayout, state: Array, workload) -> Array:

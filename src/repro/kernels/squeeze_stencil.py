@@ -29,6 +29,16 @@ traced in-tile update (the halo plumbing below is rule-agnostic):
     periodic ``window_mask`` plus a scalar-prefetched block-existence
     table (see DESIGN.md Section 2).
 
+  * ``stencil_step_mxu[_k]`` (v5, MXU stencil-as-matmul): the Moore
+    aggregation is recast as <= 3 pairs of banded matmul contractions
+    ``R_i @ X @ C_i^T`` (rank-1 SVD terms of the 3x3 weight matrix,
+    ``workload.weight_factors``) so it runs on the MXU instead of 8 VPU
+    shift-adds; P compact blocks are lane-packed per program so the
+    ~128-lane registers are filled even at rho = 8-9, and
+    ``stencil_step_mxu_batched`` adds a native (B, n_macro) batch grid —
+    one dispatch for B simulations, sharing the scalar-prefetched
+    existence table across the batch (see DESIGN.md Section 2.2).
+
 The v2/v3 halo plumbing skips gathers the workload can never read: the
 gathered direction set is derived from ``workload.weight(offset)``
 (``halo_needs``), so e.g. HeatDiffusion (orthogonal-only) skips all four
@@ -50,6 +60,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -115,7 +126,7 @@ def _stencil_step_blocks(layout: BlockLayout, state: jnp.ndarray,
     nc = s.shape[0]
     padded_src = jnp.concatenate(
         [s, jnp.zeros((nc, 1, rho, rho), s.dtype)], axis=1)
-    table = jnp.asarray(layout.neighbor_table)  # (nb, 8), ghost = nb
+    table = layout.dev_neighbor_table  # (nb, 8), ghost = nb
 
     def center_idx(i, tbl):
         del tbl
@@ -141,7 +152,7 @@ def _stencil_step_blocks(layout: BlockLayout, state: jnp.ndarray,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((nc, nb, rho, rho), workload.dtype),
         interpret=interpret,
-    )(table, *([padded_src] * 9), jnp.asarray(layout.micro_mask))
+    )(table, *([padded_src] * 9), layout.dev_micro_mask)
     return out if chan else out[0]
 
 
@@ -176,7 +187,7 @@ def _gather_halo_strips(layout: BlockLayout, s: jnp.ndarray,
     nc, nb = s.shape[0], layout.n_blocks
     need_n, need_s, need_w, need_e, need_nw, need_ne, need_sw, need_se = \
         needs if needs is not None else (True,) * 8
-    table = jnp.asarray(layout.neighbor_table)
+    table = layout.dev_neighbor_table
     z_row = jnp.zeros((nc, 1, rho), s.dtype)
     z_cell = jnp.zeros((nc, 1), s.dtype)
     z_row_nb = jnp.zeros((nc, nb, rho), s.dtype)
@@ -242,7 +253,7 @@ def _stencil_step_strips(layout: BlockLayout, state: jnp.ndarray,
         out_specs=pl.BlockSpec((nc, 1, rho, rho), lambda i: (0, i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((nc, nb, rho, rho), workload.dtype),
         interpret=interpret,
-    )(s, halo, jnp.asarray(layout.micro_mask))
+    )(s, halo, layout.dev_micro_mask)
     return out if chan else out[0]
 
 
@@ -316,7 +327,7 @@ def _stencil_step_fused(layout: BlockLayout, state: jnp.ndarray,
     c_sw = jnp.concatenate([s[:, :, -1, 0:1], z1], 1)
     c_se = jnp.concatenate([s[:, :, -1, -1:], z1], 1)
 
-    table = jnp.asarray(layout.neighbor_table)  # ghost == nb
+    table = layout.dev_neighbor_table  # ghost == nb
 
     def at(d):
         def idx(i, tbl):
@@ -365,7 +376,7 @@ def _stencil_step_fused(layout: BlockLayout, state: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((nc, nb, rho, rho), workload.dtype),
         interpret=interpret,
     )(table, s, *[arr for arr, _ in operands_specs],
-      jnp.asarray(layout.micro_mask))
+      layout.dev_micro_mask)
     return out if chan else out[0]
 
 
@@ -424,7 +435,7 @@ def _gather_halo_k(layout: BlockLayout, s: jnp.ndarray, k: int):
     """
     rho = layout.rho
     nc = s.shape[0]
-    table = jnp.asarray(layout.neighbor_table)
+    table = layout.dev_neighbor_table
 
     def take(strip, d):  # strip (C, nb, h, w), pre-sliced before the gather
         z = jnp.zeros((nc, 1) + strip.shape[2:], s.dtype)
@@ -464,7 +475,7 @@ def stencil_step_fused_k(layout: BlockLayout, state: jnp.ndarray,
     # static geometry built outside the trace — only what v4 reads (the
     # per-block halo_mask of the XLA path is reconstructed in-kernel)
     layout.materialize()
-    _ = layout.existence_table, layout.window_mask(k)
+    _ = layout.dev_existence_table, layout.dev_window_mask(k)
     return _stencil_step_fused_k(layout, state, workload, k,
                                  interpret=resolve_interpret(interpret))
 
@@ -479,8 +490,8 @@ def _stencil_step_fused_k(layout: BlockLayout, state: jnp.ndarray,
     nc = s.shape[0]
     w = rho + 2 * k
     top, bot, west, east = _gather_halo_k(layout, s, k)
-    existence = jnp.asarray(layout.existence_table)      # (nb, 8) int32 0/1
-    wmask = jnp.asarray(layout.window_mask(k), jnp.int32)  # shared, periodic
+    existence = layout.dev_existence_table               # (nb, 8) int32 0/1
+    wmask = layout.dev_window_mask(k)                    # shared, periodic
 
     blk = lambda *shape: pl.BlockSpec(shape, lambda i, ex: (0, i) + (0,) * (len(shape) - 2))  # noqa: E731,E501
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -501,6 +512,211 @@ def _stencil_step_fused_k(layout: BlockLayout, state: jnp.ndarray,
         interpret=interpret,
     )(existence, s, top, bot, west, east, wmask)
     return out if chan else out[0]
+
+
+# ======================================================================
+# v5: MXU stencil-as-matmul — lane-packed macro-tiles + native batch grid
+# ======================================================================
+@functools.lru_cache(maxsize=128)
+def _mxu_operators(workload: StencilWorkload, w: int, p: int):
+    """Static MXU contraction operands for one (workload, window, pack):
+    ``R`` (T, w, w) banded row contractions and ``CT`` (T, p*w, p*w), the
+    block-diagonal (per lane-packed slot) transpose of the banded column
+    contractions, so the kernel's whole Moore aggregation is
+    ``sum_t (R[t] @ X) @ CT[t]`` — two MXU matmuls per rank-1 term.
+    float32 host build; cached per workload (the factor count T <= 3)."""
+    from repro.workloads.base import banded_operators
+    rm, cm = banded_operators(workload.weight_factors, w, np.float32)
+    t = rm.shape[0]
+    ct = np.zeros((t, p * w, p * w), np.float32)
+    for i in range(t):
+        for s in range(p):
+            ct[i, s * w:(s + 1) * w, s * w:(s + 1) * w] = cm[i].T
+    return rm, ct
+
+
+def _mxu_kernel(workload, k, p, n_terms, ex_ref, c_ref, top_ref, bot_ref,
+                west_ref, east_ref, wmask_ref, r_ref, ct_ref, out_ref):
+    """One grid step = one (batch element, macro-tile): assemble the
+    (C, w, P*w) lane-packed window (w = rho+2k, P slots of width w),
+    rebuild each slot's occupancy from the shared periodic window mask
+    gated by its scalar-prefetched neighbor existence (the v4 discipline,
+    per slot), then run k substeps whose Moore aggregation is the rank-1
+    banded matmul pair per term — MXU contractions instead of 8 VPU
+    shifts. Slot borders accumulate truncated-band garbage ring by ring
+    (substep j corrupts cells closer than j to a slot edge); the center
+    sits at distance >= k, so the final (C, rho, P*rho) extraction is
+    exact — the same shrinking-window argument as v4, without shrinking
+    the arrays."""
+    rho = c_ref.shape[-2]
+    w = rho + 2 * k
+    nc = c_ref.shape[1]
+    c = c_ref[0, :, 0]                       # (C, rho, P*rho)
+    top = top_ref[0, :, 0]                   # (C, k, P*w)
+    bot = bot_ref[0, :, 0]
+    west = west_ref[0, :, 0]                 # (C, rho, P*k)
+    east = east_ref[0, :, 0]
+    i = pl.program_id(1)
+
+    cur = jnp.zeros((nc, w, p * w), c.dtype)
+    mask = jnp.zeros((w, p * w), jnp.int32)
+    wm = wmask_ref[...].astype(jnp.int32)
+    for s in range(p):
+        b0 = s * w
+        cur = cur.at[:, k:k + rho, b0 + k:b0 + k + rho].set(
+            c[:, :, s * rho:(s + 1) * rho])
+        cur = cur.at[:, :k, b0:b0 + w].set(top[:, :, s * w:(s + 1) * w])
+        cur = cur.at[:, w - k:, b0:b0 + w].set(bot[:, :, s * w:(s + 1) * w])
+        cur = cur.at[:, k:k + rho, b0:b0 + k].set(
+            west[:, :, s * k:(s + 1) * k])
+        cur = cur.at[:, k:k + rho, b0 + k + rho:b0 + w].set(
+            east[:, :, s * k:(s + 1) * k])
+        m = wm
+        for d, (ys, xs) in enumerate(_halo_regions(rho, k)):
+            m = m.at[ys, xs].set(m[ys, xs] * ex_ref[i * p + s, d])
+        mask = mask.at[:, b0:b0 + w].set(m)
+
+    rm = r_ref[...]                          # (T, w, w) f32
+    ct = ct_ref[...]                         # (T, P*w, P*w) f32
+    int_agg = jnp.issubdtype(jnp.dtype(workload.agg_dtype), jnp.integer)
+    for _ in range(k):
+        x = cur.astype(jnp.float32)
+        aggs = []
+        for ci in range(nc):
+            a = jnp.zeros((w, p * w), jnp.float32)
+            for t in range(n_terms):
+                y = jax.lax.dot(rm[t], x[ci],
+                                preferred_element_type=jnp.float32)
+                a = a + jax.lax.dot(y, ct[t],
+                                    preferred_element_type=jnp.float32)
+            aggs.append(a)
+        agg = jnp.stack(aggs)
+        # integer CA aggregates: the f32 matmul reconstructs integer
+        # neighbor counts to ~1e-5, so nearest-int rounding is bit-exact
+        agg = (jnp.rint(agg).astype(workload.agg_dtype) if int_agg
+               else agg.astype(workload.agg_dtype))
+        if workload.n_channels > 1:
+            nxt = workload.apply(cur, agg, mask)
+        else:
+            nxt = workload.apply(cur[0], agg[0], mask)[None]
+        cur = nxt.astype(c.dtype)
+
+    out = jnp.zeros((nc, rho, p * rho), out_ref.dtype)
+    for s in range(p):
+        out = out.at[:, :, s * rho:(s + 1) * rho].set(
+            cur[:, k:k + rho, s * w + k:s * w + k + rho].astype(out.dtype))
+    out_ref[0, :, 0] = out
+
+
+def _pack_macro(arr: jnp.ndarray, nb: int, p: int, n_macro: int):
+    """(L, nb, h, c) per-block strips -> (L, n_macro, h, P*c) lane-packed
+    macro strips (zero-filled padding slots past nb)."""
+    l, _, h, cols = arr.shape
+    pad = jnp.zeros((l, n_macro * p - nb, h, cols), arr.dtype)
+    a = jnp.concatenate([arr, pad], axis=1)
+    a = a.reshape(l, n_macro, p, h, cols).transpose(0, 1, 3, 2, 4)
+    return a.reshape(l, n_macro, h, p * cols)
+
+
+def stencil_step_mxu_batched(layout: BlockLayout, states: jnp.ndarray,
+                             workload: StencilWorkload = LIFE, *, k: int = 1,
+                             interpret: Optional[bool] = None) -> jnp.ndarray:
+    """v5, native batch grid: advance B independent simulations ``k`` exact
+    steps in ONE kernel dispatch over a (B, n_macro) grid.
+
+    states (B, C?, n_blocks, rho, rho) -> same, k steps later. The halo
+    strips are pre-gathered v2-style but emitted macro-tile-contiguous (P
+    blocks lane-packed per program, P*(rho+2k) ~ 128 lanes); the
+    scalar-prefetched existence table is shared across the whole batch
+    instead of being re-staged per simulation by a vmap of pallas_call.
+    Requires k <= rho (one block ring, as v4).
+    """
+    if k < 1:
+        raise ValueError(f"need k >= 1, got k={k}")
+    if k > layout.rho:
+        raise ValueError(
+            f"mxu kernel needs k <= rho, got k={k} > rho={layout.rho} "
+            "(use SqueezeBlockEngine.step_k for deeper-than-one-block halos)")
+    # static geometry + operators built outside the trace
+    layout.materialize()
+    _ = layout.dev_existence_padded(k), layout.dev_window_mask(k)
+    _ = _mxu_operators(workload, layout.rho + 2 * k,
+                       layout.macro_tiles(k)[0])
+    return _stencil_step_mxu_batched(layout, states, workload, k,
+                                     interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("layout", "workload", "k", "interpret"))
+def _stencil_step_mxu_batched(layout: BlockLayout, states: jnp.ndarray,
+                              workload: StencilWorkload, k: int, *,
+                              interpret: bool) -> jnp.ndarray:
+    rho, nb = layout.rho, layout.n_blocks
+    w = rho + 2 * k
+    p, n_macro, _ = layout.macro_tiles(k)
+    chan = workload.n_channels > 1
+    s = states if chan else states[:, None]  # (B, C, nb, rho, rho)
+    b, nc = s.shape[0], s.shape[1]
+    # strip gathers are independent per leading axis: fold (B, C) into one
+    flat = s.reshape(b * nc, nb, rho, rho)
+    top, bot, west, east = _gather_halo_k(layout, flat, k)
+
+    def pack(arr):  # -> (B, C, n_macro, h, P*cols)
+        m = _pack_macro(arr, nb, p, n_macro)
+        return m.reshape((b, nc) + m.shape[1:])
+
+    cm, topm, botm = pack(flat), pack(top), pack(bot)
+    westm, eastm = pack(west), pack(east)
+    rm, ct = _mxu_operators(workload, w, p)
+    n_terms = rm.shape[0]
+
+    def blk(h, cols):
+        return pl.BlockSpec((1, nc, 1, h, cols),
+                            lambda bi, i, ex: (bi, 0, i, 0, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, n_macro),
+        in_specs=[
+            blk(rho, p * rho),
+            blk(k, p * w), blk(k, p * w),      # top, bot macro rows
+            blk(rho, p * k), blk(rho, p * k),  # west, east macro cols
+            pl.BlockSpec((w, w), lambda bi, i, ex: (0, 0)),
+            pl.BlockSpec((n_terms, w, w), lambda bi, i, ex: (0, 0, 0)),
+            pl.BlockSpec((n_terms, p * w, p * w),
+                         lambda bi, i, ex: (0, 0, 0)),
+        ],
+        out_specs=blk(rho, p * rho),
+    )
+    out = pl.pallas_call(
+        functools.partial(_mxu_kernel, workload, k, p, n_terms),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, nc, n_macro, rho, p * rho),
+                                       workload.dtype),
+        interpret=interpret,
+    )(layout.dev_existence_padded(k), cm, topm, botm, westm, eastm,
+      layout.dev_window_mask(k), jnp.asarray(rm), jnp.asarray(ct))
+    out = out.reshape(b, nc, n_macro, rho, p, rho).transpose(0, 1, 2, 4, 3, 5)
+    out = out.reshape(b, nc, n_macro * p, rho, rho)[:, :, :nb]
+    return out if chan else out[:, 0]
+
+
+def stencil_step_mxu(layout: BlockLayout, state: jnp.ndarray,
+                     workload: StencilWorkload = LIFE, *,
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
+    """One workload step, v5 (MXU stencil-as-matmul on lane-packed
+    macro-tiles); state (C?, n_blocks, rho, rho) -> same."""
+    return stencil_step_mxu_batched(layout, state[None], workload, k=1,
+                                    interpret=interpret)[0]
+
+
+def stencil_step_mxu_k(layout: BlockLayout, state: jnp.ndarray,
+                       workload: StencilWorkload = LIFE, *, k: int = 2,
+                       interpret: Optional[bool] = None) -> jnp.ndarray:
+    """v5 temporal fusion: k exact steps in one MXU macro-tile launch,
+    reusing the v4 mask discipline (k <= rho)."""
+    return stencil_step_mxu_batched(layout, state[None], workload, k=k,
+                                    interpret=interpret)[0]
 
 
 # ======================================================================

@@ -31,9 +31,11 @@ batched runner.
 """
 from __future__ import annotations
 
+import functools
 from typing import Tuple
 
 import jax.numpy as jnp
+import numpy as np
 
 Array = jnp.ndarray
 
@@ -83,6 +85,29 @@ class StencilWorkload:
     def weights2d(self):
         """Weights over the 2D Moore directions, MOORE_DIRS order."""
         return tuple(self.weight(d) for d in MOORE_DIRS)
+
+    @property
+    def weights3x3(self) -> np.ndarray:
+        """The 2D neighbor weights as a 3x3 float64 matrix indexed
+        ``[dy+1, dx+1]`` (center weight 0: the aggregate never includes the
+        cell itself — rules read it through ``center``)."""
+        w = np.zeros((3, 3), np.float64)
+        for dx, dy in MOORE_DIRS:
+            w[dy + 1, dx + 1] = self.weight((dx, dy))
+        return w
+
+    @functools.cached_property
+    def weight_factors(self) -> Tuple[Tuple[Tuple[float, ...],
+                                            Tuple[float, ...]], ...]:
+        """Rank-1 decomposition of ``weights3x3``: <= 3 ``(row, col)``
+        pairs with ``sum_i outer(row_i, col_i) == weights3x3`` exactly (to
+        float64 SVD precision; verified at build time). This is what turns
+        the Moore aggregation into banded matmul contractions
+        ``R_i @ X @ C_i^T`` on the MXU (see ``svd_rank1_terms`` and
+        DESIGN.md Section 2.2). Cached on the frozen dataclass instance;
+        hashability/equality (jit static args, runner cache keys) are
+        untouched — dataclass hashing reads fields, not ``__dict__``."""
+        return svd_rank1_terms(self.weights3x3)
 
     def tile_rule(self, center: Array, padded: Array, mask) -> Array:
         """One update on a halo-padded tile: ``center`` (C?, h, w), ``padded``
@@ -140,6 +165,59 @@ def halo_needs(weights) -> "HaloNeeds":
     need_e = need_ne or need_se or w[(1, 0)] != 0
     return (need_n, need_s, need_w, need_e,
             need_nw, need_ne, need_sw, need_se)
+
+
+def svd_rank1_terms(weights3x3: np.ndarray, tol: float = 1e-9):
+    """Decompose a 3x3 weight matrix into <= 3 rank-1 ``(row, col)`` terms
+    by SVD: ``W = sum_i outer(row_i, col_i)`` with ``sqrt(sigma_i)`` folded
+    into each factor (keeps both factors O(1), which matters once they are
+    cast to the kernel's float32 operands).
+
+    Singular values below ``tol * sigma_max`` are truncated — every
+    shipped workload is exactly rank 2 (Life's ones-minus-center, Heat's
+    5-point cross, Gray-Scott's 9-point Laplacian all have two equal
+    rows), so truncation only drops numerical noise. Reconstruction is
+    verified here: a workload whose weights the decomposition cannot
+    represent exactly fails loudly at build time, not with silently wrong
+    aggregates.
+    """
+    w = np.asarray(weights3x3, np.float64)
+    if w.shape != (3, 3):
+        raise ValueError(f"need a 3x3 weight matrix, got {w.shape}")
+    u, s, vh = np.linalg.svd(w)
+    keep = s > (tol * s[0] if s[0] > 0 else tol)
+    terms = tuple(
+        (tuple(float(x) for x in u[:, i] * np.sqrt(s[i])),
+         tuple(float(x) for x in vh[i, :] * np.sqrt(s[i])))
+        for i in range(3) if keep[i])
+    recon = np.zeros((3, 3), np.float64)
+    for row, col in terms:
+        recon += np.outer(row, col)
+    if not np.allclose(recon, w, rtol=0, atol=1e-12):
+        raise ValueError(
+            f"rank-1 SVD terms do not reconstruct the weight matrix "
+            f"exactly (max err {np.abs(recon - w).max():.3e})")
+    return terms
+
+
+def banded_operators(terms, window: int, dtype=np.float32):
+    """Build the banded contraction matrices for the rank-1 terms over a
+    ``window x window`` tile: ``R`` (T, window, window) with
+    ``R[t, y, y+dy] = row_t[dy+1]`` and ``C`` (T, window, window) with
+    ``C[t, x, x+dx] = col_t[dx+1]``, so that ``R[t] @ X @ C[t].T`` sums
+    ``row_t[dy+1] * col_t[dx+1] * X[y+dy, x+dx]`` over the 3x3 offsets.
+    Border rows/cols get truncated bands (their outputs fall outside the
+    shrinking live window of the fused substeps and are never read).
+    """
+    tm = np.zeros((len(terms), window, window), dtype)
+    cm = np.zeros((len(terms), window, window), dtype)
+    for t, (row, col) in enumerate(terms):
+        for y in range(window):
+            for d in (-1, 0, 1):
+                if 0 <= y + d < window:
+                    tm[t, y, y + d] = row[d + 1]
+                    cm[t, y, y + d] = col[d + 1]
+    return tm, cm
 
 
 def check_workload_ndim(workload: "StencilWorkload", ndim: int):

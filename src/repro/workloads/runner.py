@@ -6,7 +6,10 @@ r, m, workload, k)``. This module provides the building block:
 
   * one compiled step per static configuration, vmapped over a leading
     batch axis of independent states (B simulations advance in one XLA
-    call);
+    call); the 'pallas-mxu' kind instead dispatches ONE kernel over a
+    native (B, n_macro_tiles) grid (``supports_native_batch`` on the
+    engine), sharing the scalar-prefetched block tables across the batch
+    — the vmap path stays as the fallback for every other kind;
   * fused multi-step serving: ``run`` tiles the step count into
     floor(steps/k) vmapped k-step launches (temporal fusion over the
     engines' depth-k halos) plus a single-step remainder; ``k`` is part of
@@ -109,6 +112,12 @@ class BatchedRunner:
                              fusion_k=k if is_block else None)
         fused = is_block and k > 1
         stats = self.stats
+        # the v5 'mxu' engine advances the whole batch through ONE kernel
+        # dispatch over a (B, n_macro_tiles) grid — the scalar-prefetched
+        # tables are shared across the batch instead of re-staged per
+        # simulation by a vmap of pallas_call; every other kind keeps the
+        # vmap path
+        native = getattr(engine, "supports_native_batch", False)
 
         def traced_step(state):
             stats.traces += 1  # runs only while tracing; cached calls skip it
@@ -118,12 +127,22 @@ class BatchedRunner:
             stats.traces += 1
             return engine.step_k(state, k)
 
-        batched_step = jax.jit(jax.vmap(traced_step))
+        def traced_batch_step(states):
+            stats.traces += 1
+            return engine.step_batched(states)
+
+        def traced_batch_step_k(states):
+            stats.traces += 1
+            return engine.step_k_batched(states, k)
+
+        batched_step = jax.jit(
+            traced_batch_step if native else jax.vmap(traced_step))
 
         def _run(states, steps):
-            body = jax.vmap(traced_step)
+            body = traced_batch_step if native else jax.vmap(traced_step)
             if fused:
-                body_k = jax.vmap(traced_step_k)
+                body_k = (traced_batch_step_k if native
+                          else jax.vmap(traced_step_k))
                 states = jax.lax.fori_loop(
                     0, steps // k, lambda _, s: body_k(s), states)
                 return jax.lax.fori_loop(

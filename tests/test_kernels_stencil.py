@@ -20,11 +20,11 @@ IDS = [f"{f.name}-r{r}-m{m}" for f, r, m in CASES]
 
 
 STEPS = {"blocks": ops.life_step_blocks, "strips": ops.life_step_strips,
-         "fused": ops.life_step_fused}
+         "fused": ops.life_step_fused, "mxu": ops.stencil_step_mxu}
 
 
 @pytest.mark.parametrize("frac,r,m", CASES, ids=IDS)
-@pytest.mark.parametrize("variant", ["blocks", "strips", "fused"])
+@pytest.mark.parametrize("variant", ["blocks", "strips", "fused", "mxu"])
 def test_stencil_kernel_matches_oracle(frac, r, m, variant):
     layout = BlockLayout(frac, r, m)
     eng = SqueezeBlockEngine(layout)
@@ -38,7 +38,7 @@ def test_stencil_kernel_matches_oracle(frac, r, m, variant):
         state = got
 
 
-@pytest.mark.parametrize("variant", ["blocks", "strips", "fused"])
+@pytest.mark.parametrize("variant", ["blocks", "strips", "fused", "mxu"])
 def test_stencil_kernel_matches_bb_end_to_end(variant):
     frac, r, m = fractals.SIERPINSKI, 6, 2
     layout = BlockLayout(frac, r, m)
@@ -63,9 +63,12 @@ def test_variants_agree_many_steps():
     s1 = eng.init_random(seed=2)
     s2 = s1
     s3 = s1
+    s4 = s1
     for _ in range(10):
         s1 = ops.life_step_blocks(layout, s1, interpret=True)
         s2 = ops.life_step_strips(layout, s2, interpret=True)
         s3 = ops.life_step_fused(layout, s3, interpret=True)
+        s4 = ops.stencil_step_mxu(layout, s4, interpret=True)
     np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
     np.testing.assert_array_equal(np.asarray(s1), np.asarray(s3))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s4))

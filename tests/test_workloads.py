@@ -151,6 +151,118 @@ def test_pallas_engine_factory_kinds():
                                    np.asarray(blk.step(s)), **_tol(wl))
 
 
+# ----------------------------------------------- v5 MXU stencil-as-matmul
+#: one case per lane-packing regime the paper's rho = 8-9 serving sweet
+#: spot cares about: rho 3 (carpet m=1), 8 (sierpinski m=3), 9 (carpet m=2)
+MXU_CASES = [
+    (fractals.CARPET, 2, 1),
+    (fractals.SIERPINSKI, 5, 3),
+    (fractals.CARPET, 3, 2),
+]
+MXU_CASE_IDS = [f"{f.name}-rho{f.s ** m}" for f, r, m in MXU_CASES]
+
+
+def test_weight_factors_reconstruct_exactly():
+    """The rank-1 SVD terms must rebuild weights3x3 *exactly* (float64
+    SVD precision) for every shipped workload — the MXU kernel's banded
+    contractions are only as correct as this decomposition. Covers the
+    multi-channel Gray-Scott 9-point Laplacian."""
+    from repro.workloads import WORKLOADS
+    for wl in WORKLOADS.values():
+        terms = wl.weight_factors
+        assert 1 <= len(terms) <= 3, f"{wl.name}: rank {len(terms)} > 3"
+        recon = sum(np.outer(row, col) for row, col in terms)
+        np.testing.assert_allclose(
+            recon, wl.weights3x3, rtol=0, atol=1e-12,
+            err_msg=f"{wl.name}: rank-1 terms do not reconstruct weights2d")
+    assert GRAY_SCOTT.n_channels == 2  # the multi-channel case is covered
+
+
+@pytest.mark.parametrize("k", [1, 2, 3])
+@pytest.mark.parametrize("wl", ALL_WORKLOADS, ids=WL_IDS)
+@pytest.mark.parametrize("frac,r,m", MXU_CASES, ids=MXU_CASE_IDS)
+def test_mxu_kernel_matches_block_engine(frac, r, m, wl, k):
+    """v5 <-> block-engine step-for-step parity per workload x fusion
+    depth x rho: bit-exact for the CA workloads (the f32 banded matmul
+    reconstructs integer counts, rounded in-kernel), 1e-5 for the PDEs."""
+    layout = BlockLayout(frac, r, m)
+    eng = make_engine("block", frac, r, m, workload=wl)
+    s = eng.init_random(seed=5)
+    for rnd in range(2):
+        want = s
+        for _ in range(k):
+            want = eng.step(want)
+        got = sk.stencil_step_mxu_k(layout, s, wl, k=k, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), **_tol(wl),
+            err_msg=f"{wl.name}/k={k} diverged (round {rnd})")
+        s = got
+
+
+def test_mxu_batch_grid_matches_single_dispatch():
+    """The native (B, n_macro) batch grid must agree with B independent
+    single-simulation dispatches — batching is pure orchestration."""
+    frac, r, m = fractals.SIERPINSKI, 5, 3
+    layout = BlockLayout(frac, r, m)
+    for wl, k in ((LIFE, 2), (GRAY_SCOTT, 1)):
+        eng = make_engine("block", frac, r, m, workload=wl)
+        states = jnp.stack([eng.init_random(seed=i) for i in range(4)])
+        native = sk.stencil_step_mxu_batched(layout, states, wl, k=k,
+                                             interpret=True)
+        for b in range(states.shape[0]):
+            single = sk.stencil_step_mxu_k(layout, states[b], wl, k=k,
+                                           interpret=True)
+            np.testing.assert_allclose(
+                np.asarray(native[b]), np.asarray(single), **_tol(wl),
+                err_msg=f"{wl.name}/k={k}: batch grid != single, b={b}")
+
+
+def test_mxu_runner_batch_grid_matches_vmap_path():
+    """BatchedRunner's pallas-mxu batch-grid dispatch must match both a
+    per-simulation loop and the vmap path it replaces (pallas-strips)."""
+    frac, r, m = fractals.SIERPINSKI, 5, 3
+    runner = BatchedRunner()
+    for wl in (HEAT, LIFE):
+        states = runner.init_batch("pallas-mxu", frac, r, seeds=range(8),
+                                   m=m, workload=wl)
+        eng = runner.engine_for("pallas-mxu", frac, r, m=m, workload=wl)
+        assert eng.supports_native_batch
+        stepped = runner.step("pallas-mxu", frac, r, states, m=m,
+                              workload=wl)
+        ran = runner.run("pallas-mxu", frac, r, states, steps=5, m=m,
+                         workload=wl)
+        vmap_ran = runner.run("pallas-strips", frac, r, states, steps=5,
+                              m=m, workload=wl)
+        np.testing.assert_allclose(np.asarray(ran), np.asarray(vmap_ran),
+                                   **_tol(wl),
+                                   err_msg=f"{wl.name}: mxu grid != vmap")
+        for b in range(states.shape[0]):
+            np.testing.assert_allclose(np.asarray(stepped[b]),
+                                       np.asarray(eng.step(states[b])),
+                                       **_tol(wl))
+    # one build + a handful of traces per config, exactly like the vmap path
+    assert runner.stats.builds == 4, runner.stats
+
+
+def test_mxu_engine_factory_and_limits():
+    frac, r, m = fractals.CARPET, 2, 1  # rho = 3
+    eng = make_engine("pallas-mxu", frac, r, m, workload=LIFE)
+    blk = make_engine("block", frac, r, m, workload=LIFE)
+    s = eng.init_random(seed=3)
+    np.testing.assert_array_equal(np.asarray(eng.step(s)),
+                                  np.asarray(blk.step(s)))
+    out = eng.run(s, 4)
+    want = s
+    for _ in range(4):
+        want = blk.step(want)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+    with pytest.raises(ValueError, match="k <= rho"):
+        sk.stencil_step_mxu_k(BlockLayout(frac, r, m), s, LIFE, k=4,
+                              interpret=True)
+    with pytest.raises(ValueError, match="native batching"):
+        make_engine("pallas-strips", frac, r, m).step_batched(s[None])
+
+
 # ----------------------------------------------------------- batched runner
 def test_batched_runner_matches_python_loop():
     frac, r = fractals.SIERPINSKI, 5
