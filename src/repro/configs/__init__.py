@@ -22,7 +22,7 @@ ARCHS = {
     "llava-next-34b": "llava_next_34b",
 }
 
-#: long_500k policy (DESIGN.md Section 5): sub-quadratic archs only
+#: long_500k policy: sub-quadratic archs only
 LONG_CONTEXT_ARCHS = ("mixtral-8x22b", "recurrentgemma-9b", "mamba2-780m",
                       "gemma2-2b")
 

@@ -32,6 +32,17 @@ from repro.workloads.base import MOORE_DIRS  # noqa: F401
 Array = jnp.ndarray
 
 
+def halo_regions(rho: int, k: int):
+    """The 8 (ys, xs) window slices of the depth-k halo frame, in
+    MOORE_DIRS order (NW, N, NE, W, E, SW, S, SE). Shared by the fused
+    kernels and the distributed engine to gate the periodic window mask
+    by per-block neighbor existence."""
+    w = rho + 2 * k
+    lo, mid, hi = slice(0, k), slice(k, k + rho), slice(k + rho, w)
+    return ((lo, lo), (lo, mid), (lo, hi), (mid, lo), (mid, hi),
+            (hi, lo), (hi, mid), (hi, hi))
+
+
 def compact_meshgrid(frac: NBBFractal, r: int) -> Tuple[Array, Array]:
     """(cx, cy) int32 arrays of shape (rows, cols) covering D_c^2."""
     rows, cols = frac.compact_dims(r)
@@ -325,14 +336,73 @@ class BlockLayout:
         n_macro)`` so padding slots (dead lanes) are minimized. ``nb_pad =
         n_macro * P >= n_blocks``; slots past ``n_blocks`` are zero-filled
         ghosts whose outputs are sliced off."""
+        return self.macro_tiles_for(self.n_blocks, k, lanes)
+
+    def macro_tiles_for(self, nb: int, k: int,
+                        lanes: int = 128) -> Tuple[int, int, int]:
+        """``macro_tiles`` for an arbitrary block count ``nb`` — the
+        distributed engine packs each shard's *local* blocks (nb_padded /
+        n_shards of them) into their own macro-tiles, so the lane-packing
+        geometry must be computable per shard, not only for the full
+        compact domain."""
         if k < 1:
             raise ValueError(f"halo depth must be >= 1, got {k}")
         w = self.rho + 2 * k
-        nb = self.n_blocks
         p = max(1, min(lanes // w, nb))
         n_macro = -(-nb // p)
         p = -(-nb // n_macro)  # rebalance: same tile count, fewer dead slots
         return p, n_macro, n_macro * p
+
+    # ------------------------------------------- depth-k exchange strips
+    # The distributed halo exchange (core/distributed.py) ships *edge
+    # bands*, never whole blocks: per block the top/bottom k rows and the
+    # west/east k columns (transposed so all four stack to (4, k, rho)).
+    # Corner k x k pieces are sub-slices of the top/bottom bands, so the
+    # bands alone reconstruct a full depth-k Moore halo. Valid for
+    # k <= rho (one block ring — the same bound as the fused kernels);
+    # the consuming table is ``offset_table(k)``, whose radius-1 case is
+    # exactly ``neighbor_table`` (ghosts exact past holes at every depth).
+    def pack_edge_strips(self, state: Array, k: int) -> Array:
+        """(L, nb, rho, rho) -> (L, nb, 4, k, rho) edge bands:
+        row 0 = top k rows, row 1 = bottom k rows, row 2 = west k cols
+        (transposed), row 3 = east k cols (transposed)."""
+        rho = self.rho
+        if not (1 <= k <= rho):
+            raise ValueError(f"need 1 <= k <= rho={rho}, got k={k}")
+        top = state[:, :, :k, :]
+        bot = state[:, :, rho - k:, :]
+        west = state[:, :, :, :k].swapaxes(-1, -2)
+        east = state[:, :, :, rho - k:].swapaxes(-1, -2)
+        return jnp.stack([top, bot, west, east], axis=2)
+
+    def halo_from_strips_k(self, strips: Array, table: Array, k: int):
+        """Assemble depth-``k`` halo pieces from packed edge strips.
+
+        ``strips``: (L, ns, 4, k, rho) — ``pack_edge_strips`` output over
+        any superset of blocks (ns >= nb; the distributed engine appends a
+        zero ghost entry at ns-1). ``table``: (nb_sel, 8) row indices into
+        ``strips`` per Moore direction, ghosts already remapped to the
+        zero entry. Returns ``(top, bot, west, east)`` shaped exactly like
+        the fused kernels' ``_gather_halo_k`` output — top/bot
+        (L, nb_sel, k, rho+2k) full-width rows including the diagonal
+        k x k corners, west/east (L, nb_sel, rho, k) center columns — so
+        every depth-k consumer (XLA window assembly, v4/v5 kernels) is
+        shared between the single-device and distributed paths."""
+        rho = self.rho
+
+        def band(d, row):  # (L, nb_sel, k, rho)
+            return strips[:, table[:, d], row]
+
+        # MOORE_DIRS order: NW 0, N 1, NE 2, W 3, E 4, SW 5, S 6, SE 7
+        top = jnp.concatenate(
+            [band(0, 1)[..., rho - k:], band(1, 1),
+             band(2, 1)[..., :k]], axis=-1)
+        bot = jnp.concatenate(
+            [band(5, 0)[..., rho - k:], band(6, 0),
+             band(7, 0)[..., :k]], axis=-1)
+        west = band(3, 3).swapaxes(-1, -2)   # W neighbor's east cols
+        east = band(4, 2).swapaxes(-1, -2)   # E neighbor's west cols
+        return top, bot, west, east
 
     def existence_padded(self, k: int) -> np.ndarray:
         """(nb_pad, 8) int32 ``existence_table`` zero-padded to the macro

@@ -1,40 +1,62 @@
-"""Multi-device compact fractal stencil: shard_map + strip halo exchange.
+"""Multi-device compact fractal stencil: shard_map + k-fused strip halo
+exchange + shard-local fused kernels.
 
 The compact block domain (the *only* thing in memory — the paper's P2 win)
 is sharded along its leading block axis over a mesh axis (default "data").
-One step is:
+One fused depth-``k`` launch advances ``k`` exact steps with ONE
+collective:
 
-  1. locally slice each block's 4 edge strips + 4 corners into a packed
-     (nb_local, 4, rho+2) "source strip" array — ~(4 rho + 4)/rho^2 of the
-     state bytes;
-  2. ``all_gather`` the strips over the mesh axis (the halo exchange —
-     strips only, never the state);
-  3. gather each local block's Moore halo from the replicated strips via
-     the static neighbor table (built once from the paper's lambda/nu
-     maps) and run the fused in-tile life rule.
+  1. each shard packs its local blocks' depth-``k`` edge bands (top/bottom
+     ``k`` rows, west/east ``k`` columns — ``BlockLayout.pack_edge_strips``)
+     into a (L, nb_local, 4, k, rho) strip array, ~4k/rho of the state;
+  2. ONE ``all_gather`` replicates the strips over the mesh axis (the halo
+     exchange — strips only, never the state). Per simulated step this is
+     1/k collectives and ~4*rho*nb bytes (the per-step scheme re-ships the
+     duplicated corners every step);
+  3. each shard assembles its local blocks' depth-``k`` halos from the
+     replicated strips via the static ``offset_table(k)`` (the paper's
+     lambda/nu maps hoisted to block granularity — radius-1 for k <= rho,
+     ghosts exact past holes) and runs ``k`` fused substeps locally:
+     the v5 MXU macro-tile kernel (``compute='mxu'``), the v4 fused-depth
+     kernel (``compute='fused'``), or the XLA window path
+     (``compute='jnp'``), all parameterized by the ``StencilWorkload`` and
+     all reusing the single-device substep mask discipline (periodic
+     window mask gated by per-block neighbor existence).
 
 Because the neighbor table is arbitrary (fractal adjacency is non-local in
 compact space), a nearest-neighbor ``ppermute`` ring is insufficient in
 general; an all-gather of *strips only* keeps the exchanged volume at
-O(nb * rho) versus the O(nb * rho^2) state. For 1000+ nodes the same
-scheme shards over ("pod","data") jointly — the gather is hierarchical
-(ICI within a pod, DCI across pods) and XLA schedules it that way from the
-single logical all_gather.
+O(nb * k * rho) per k steps versus the O(nb * rho^2) state. For 1000+
+nodes the same scheme shards over ("pod", "data") jointly — the gather is
+hierarchical (ICI within a pod, DCI across pods) and XLA schedules it that
+way from the single logical all_gather.
+
+``run(state, steps)`` tiles steps into floor(steps/k) fused launches plus
+ONE remainder launch of depth steps % k, so a run performs exactly
+ceil(steps/k) halo all-gathers — asserted by ``exchange_stats()`` in the
+tests. ``run(..., donate=True)`` donates the state buffer to XLA
+(zero-copy steady-state stepping, as the single-device engines).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.baselines import life_rule
 from repro.core.compact import BlockLayout
+from repro.workloads.base import StencilWorkload, check_workload_ndim
+from repro.workloads.rules import LIFE
 
 Array = jnp.ndarray
+
+#: shard-local compute backends: XLA window path, v4 fused-depth kernel,
+#: v5 MXU macro-tile kernel
+COMPUTES = ("jnp", "fused", "mxu")
 
 
 def _pad_blocks(layout: BlockLayout, n_shards: int) -> int:
@@ -43,89 +65,63 @@ def _pad_blocks(layout: BlockLayout, n_shards: int) -> int:
     return ((nb + n_shards - 1) // n_shards) * n_shards
 
 
-def _source_strips(state: Array, rho: int) -> Array:
-    """Pack each block's edges into (nb, 4, rho+2):
-    row 0: top row | row 1: bottom row | row 2: west col | row 3: east col,
-    each padded with the block's own corners at positions [rho], [rho+1]."""
-    def pack(row_like, c0, c1):
-        return jnp.concatenate(
-            [row_like, c0[:, None], c1[:, None]], axis=1)
-    top = pack(state[:, 0, :], state[:, 0, 0], state[:, 0, -1])
-    bot = pack(state[:, -1, :], state[:, -1, 0], state[:, -1, -1])
-    west = pack(state[:, :, 0], state[:, 0, 0], state[:, -1, 0])
-    east = pack(state[:, :, -1], state[:, 0, -1], state[:, -1, -1])
-    return jnp.stack([top, bot, west, east], axis=1)
+@dataclasses.dataclass
+class ExchangeStats:
+    """Halo-exchange accounting of one engine: every fused launch issues
+    exactly one strip ``all_gather`` (verified structurally by the tests,
+    which count all-gathers in the lowered step HLO)."""
 
+    steps: int = 0            # simulated steps advanced
+    collectives: int = 0      # strip all-gathers issued
+    bytes_gathered: int = 0   # replicated strip-buffer bytes produced
 
-def _halo_from_strips(layout: BlockLayout, padded_table: Array,
-                      strips: Array, local_ids: Array) -> Array:
-    """Assemble (nb_local, 4, rho+2) Moore halos from replicated strips.
+    @property
+    def collectives_per_step(self) -> float:
+        return self.collectives / max(self.steps, 1)
 
-    padded_table: (nb_padded, 8) neighbor table, ghost rows for padding.
-    strips: (nb_padded + 1, 4, rho+2) — last entry is the zero ghost.
-    local_ids: (nb_local,) global block ids of this shard's blocks.
-    """
-    rho = layout.rho
-    table = padded_table[local_ids]  # (nbl, 8)
-    ghost = strips.shape[0] - 1
-    table = jnp.where(table == layout.ghost, ghost, table)
-
-    # MOORE_DIRS order: NW, N, NE, W, E, SW, S, SE
-    # strips rows: 0 top, 1 bottom, 2 west, 3 east; corners at [rho], [rho+1]
-    nw_se = strips[table[:, 0], 1, rho + 1]   # NW nbr bottom-right corner
-    n_bot = strips[table[:, 1], 1, :rho]      # N nbr bottom row
-    ne_sw = strips[table[:, 2], 1, rho]       # NE nbr bottom-left corner
-    w_east = strips[table[:, 3], 3, :rho]     # W nbr east col
-    e_west = strips[table[:, 4], 2, :rho]     # E nbr west col
-    sw_ne = strips[table[:, 5], 0, rho + 1]   # SW nbr top-right corner
-    s_top = strips[table[:, 6], 0, :rho]      # S nbr top row
-    se_nw = strips[table[:, 7], 0, rho]       # SE nbr top-left corner
-
-    row_top = jnp.concatenate(
-        [nw_se[:, None], n_bot, ne_sw[:, None]], axis=1)   # (nbl, rho+2)
-    row_bot = jnp.concatenate(
-        [sw_ne[:, None], s_top, se_nw[:, None]], axis=1)
-    col_w = jnp.pad(w_east, ((0, 0), (0, 2)))
-    col_e = jnp.pad(e_west, ((0, 0), (0, 2)))
-    return jnp.stack([row_top, row_bot, col_w, col_e], axis=1)
-
-
-def _tile_step(layout: BlockLayout, state: Array, halo: Array) -> Array:
-    """Vectorised in-tile life rule given assembled halos (jnp path)."""
-    rho = layout.rho
-    nbl = state.shape[0]
-    padded = jnp.zeros((nbl, rho + 2, rho + 2), jnp.int32)
-    padded = padded.at[:, 1:-1, 1:-1].set(state.astype(jnp.int32))
-    padded = padded.at[:, 0, :].set(halo[:, 0].astype(jnp.int32))
-    padded = padded.at[:, -1, :].set(halo[:, 1].astype(jnp.int32))
-    padded = padded.at[:, 1:-1, 0].set(halo[:, 2, :rho].astype(jnp.int32))
-    padded = padded.at[:, 1:-1, -1].set(halo[:, 3, :rho].astype(jnp.int32))
-    counts = jnp.zeros((nbl, rho, rho), jnp.int32)
-    for dy in (-1, 0, 1):
-        for dx in (-1, 0, 1):
-            if dx == 0 and dy == 0:
-                continue
-            counts += padded[:, 1 + dy:rho + 1 + dy, 1 + dx:rho + 1 + dx]
-    nxt = life_rule(state, counts)
-    return nxt * layout.dev_micro_mask[None]
+    @property
+    def bytes_per_step(self) -> float:
+        return self.bytes_gathered / max(self.steps, 1)
 
 
 @dataclasses.dataclass(frozen=True)
 class DistributedSqueezeEngine:
-    """Block-level Squeeze sharded over one mesh axis.
+    """Block-level Squeeze sharded over one mesh axis, workload-generic
+    and fusion-aware.
 
-    State layout: (nb_padded, rho, rho) uint8, sharded P(axis, None, None);
-    padding blocks (ids >= layout.n_blocks) are permanently dead — the
-    neighbor table never points at them.
+    State layout: (C?, nb_padded, rho, rho) — or (B, C?, nb_padded, rho,
+    rho) batched — sharded over the block axis; padding blocks (ids >=
+    layout.n_blocks) are permanently dead: the neighbor table never points
+    at them and every compute path gates them out of the occupancy mask.
+
+    ``compute`` picks the shard-local backend ('jnp' | 'fused' | 'mxu');
+    ``fusion_k`` the exchange/fusion depth used by ``run`` (None = the
+    single-device ``default_fusion_k`` heuristic, always <= rho).
     """
 
     layout: BlockLayout
     mesh: Mesh
     axis: str = "data"
+    workload: StencilWorkload = LIFE
+    compute: str = "jnp"
+    fusion_k: Optional[int] = None
+    interpret: Optional[bool] = None  # kernel computes; None = auto-detect
 
     def __post_init__(self):
+        if self.compute not in COMPUTES:
+            raise ValueError(
+                f"unknown compute {self.compute!r}; have {COMPUTES}")
+        check_workload_ndim(self.workload, 2)
+        if self.fusion_k is not None and not (
+                1 <= self.fusion_k <= self.layout.rho):
+            raise ValueError(
+                f"distributed fusion_k must be in [1, rho="
+                f"{self.layout.rho}], got {self.fusion_k} (the strip "
+                "exchange covers one block ring)")
         self.layout.materialize()
+        object.__setattr__(self, "_stats", ExchangeStats())
 
+    # ------------------------------------------------------------ geometry
     @property
     def n_shards(self) -> int:
         return self.mesh.shape[self.axis]
@@ -134,77 +130,357 @@ class DistributedSqueezeEngine:
     def nb_padded(self) -> int:
         return _pad_blocks(self.layout, self.n_shards)
 
-    def sharding(self) -> NamedSharding:
-        return NamedSharding(self.mesh, P(self.axis, None, None))
+    @property
+    def nb_local(self) -> int:
+        return self.nb_padded // self.n_shards
+
+    @property
+    def effective_fusion_k(self) -> int:
+        if self.fusion_k is not None:
+            return self.fusion_k
+        from repro.core.stencil import default_fusion_k
+        return default_fusion_k(self.layout.rho)
+
+    def state_spec(self, ndim: int) -> P:
+        """PartitionSpec sharding the block axis (position ndim-3)."""
+        spec = [None] * ndim
+        spec[ndim - 3] = self.axis
+        return P(*spec)
+
+    def sharding(self, ndim: Optional[int] = None) -> NamedSharding:
+        if ndim is None:
+            ndim = 3 + (1 if self.workload.n_channels > 1 else 0)
+        return NamedSharding(self.mesh, self.state_spec(ndim))
+
+    # ----------------------------------------------------------- accounting
+    def strip_bytes(self, k: int, batch: int = 1) -> int:
+        """Bytes of the replicated strip buffer produced by one depth-``k``
+        halo all-gather (the collective's payload)."""
+        itemsize = jnp.dtype(self.workload.dtype).itemsize
+        return (batch * self.workload.n_channels * self.nb_padded
+                * 4 * k * self.layout.rho * itemsize)
+
+    def exchange_stats(self) -> ExchangeStats:
+        """Snapshot of the halo-exchange counters (collectives issued,
+        simulated steps advanced, strip bytes gathered)."""
+        return dataclasses.replace(self._stats)
+
+    def reset_exchange_stats(self) -> None:
+        st = self._stats
+        st.steps = st.collectives = st.bytes_gathered = 0
+
+    def _account(self, k: int, launches: int, batch: int) -> None:
+        st = self._stats
+        st.steps += launches * k
+        st.collectives += launches
+        st.bytes_gathered += launches * self.strip_bytes(k, batch)
+
+    def memory_bytes(self, dtype_size: Optional[int] = None) -> int:
+        """Total (all-shard) Squeeze state bytes, padding blocks included
+        (the per-shard footprint is this / n_shards)."""
+        if dtype_size is None:
+            dtype_size = jnp.dtype(self.workload.dtype).itemsize
+        return (self.workload.n_channels * self.nb_padded
+                * self.layout.rho ** 2 * dtype_size)
+
+    # ------------------------------------------------------------ state I/O
+    def _pad_state(self, dense: Array) -> Array:
+        pad = self.nb_padded - self.layout.n_blocks
+        if pad:
+            shape = dense.shape[:-3] + (pad,) + dense.shape[-2:]
+            dense = jnp.concatenate(
+                [dense, jnp.zeros(shape, dense.dtype)], axis=-3)
+        return dense
 
     def init_random(self, seed: int) -> Array:
         from repro.core.stencil import SqueezeBlockEngine
-        dense = SqueezeBlockEngine(self.layout).init_random(seed)
-        rho = self.layout.rho
-        pad = self.nb_padded - self.layout.n_blocks
-        dense = jnp.concatenate(
-            [dense, jnp.zeros((pad, rho, rho), dense.dtype)], axis=0)
-        return jax.device_put(dense, self.sharding())
+        dense = SqueezeBlockEngine(self.layout,
+                                   self.workload).init_random(seed)
+        dense = self._pad_state(dense)
+        return jax.device_put(dense, self.sharding(dense.ndim))
+
+    def init_batch(self, seeds) -> Array:
+        """Stack independent initial states: (B, C?, nb_padded, rho, rho),
+        sharded over the block axis."""
+        from repro.core.stencil import SqueezeBlockEngine
+        eng = SqueezeBlockEngine(self.layout, self.workload)
+        dense = jnp.stack([eng.init_random(int(s)) for s in seeds])
+        dense = self._pad_state(dense)
+        return jax.device_put(dense, self.sharding(dense.ndim))
 
     def to_dense(self, state: Array) -> Array:
         """Strip padding blocks (for comparison against single-device)."""
-        return state[: self.layout.n_blocks]
+        return state[..., : self.layout.n_blocks, :, :]
 
+    def to_expanded(self, state: Array) -> Array:
+        """(B?, C?, nb_padded, rho, rho) -> (B?, C?, n, n) expanded."""
+        return self.layout.to_expanded(self.to_dense(state))
+
+    # --------------------------------------------------- canonical 5D states
+    def _canon(self, state: Array) -> Tuple[Array, bool]:
+        """Any public state rank -> ((B, C, nb_padded, rho, rho), batched)."""
+        chan = self.workload.n_channels > 1
+        base = 4 if chan else 3
+        if state.ndim == base:
+            return (state[None] if chan else state[None, None]), False
+        if state.ndim == base + 1:
+            return (state if chan else state[:, None]), True
+        raise ValueError(
+            f"bad state rank {state.ndim} for workload "
+            f"{self.workload.name!r} (expected {base} or {base + 1})")
+
+    def _uncanon(self, s5: Array, batched: bool) -> Array:
+        chan = self.workload.n_channels > 1
+        if batched:
+            return s5 if chan else s5[:, 0]
+        return s5[0] if chan else s5[0, 0]
+
+    # ------------------------------------------------------- compiled steps
     @functools.cached_property
-    def _step_fn(self):
-        import numpy as np
+    def _cache(self) -> dict:
+        """Per-instance memo of device tables and jitted step/run fns."""
+        return {}
+
+    def _memo(self, key, build):
+        cache = self._cache
+        if key not in cache:
+            cache[key] = build()
+        return cache[key]
+
+    def _shard_operands(self, k: int) -> Tuple[Array, Array, Array]:
+        """Per-shard static operands of a depth-``k`` launch, built ONCE
+        and device_put sharded over the block axis (a traced step would
+        otherwise re-derive them per launch — ~15 ops of pure overhead on
+        the per-step critical path):
+
+          * halo mask (nb_padded, w, w): ``layout.halo_mask(k)`` (periodic
+            window occupancy, ghost regions zeroed) with all-zero rows for
+            padding blocks — so the substep mask discipline AND the
+            padding-stays-dead guarantee are a single multiply;
+          * neighbor table (nb_padded, 8): ``offset_table(k)`` (radius-1 ==
+            the exact-past-holes Moore table), ghosts pre-remapped to the
+            appended zero-strip row, all-ghost rows for padding;
+          * existence (nb_padded, 8) int32: scalar-prefetch operand of the
+            shard-local kernels' in-kernel mask reconstruction.
+        """
+        def build():
+            layout = self.layout
+            pad = self.nb_padded - layout.n_blocks
+            w = layout.rho + 2 * k
+            mask = np.concatenate(
+                [layout.halo_mask(k),
+                 np.zeros((pad, w, w), np.uint8)], axis=0)
+            table = np.concatenate(
+                [layout.offset_table(k),
+                 np.full((pad, 8), layout.ghost, np.int32)], axis=0)
+            table = np.where(table == layout.ghost,
+                             np.int32(self.nb_padded), table)
+            existence = np.concatenate(
+                [layout.existence_table,
+                 np.zeros((pad, 8), np.int32)], axis=0)
+            row = NamedSharding(self.mesh, P(self.axis, None))
+            cube = NamedSharding(self.mesh, P(self.axis, None, None))
+            return (jax.device_put(mask, cube),
+                    jax.device_put(table, row),
+                    jax.device_put(existence, row))
+        return self._memo(("operands", k), build)
+
+    def _materialize(self, k: int) -> None:
+        """Build every static host/device table a depth-``k`` traced step
+        reads — outside any trace."""
+        layout = self.layout
+        layout.materialize()
+        _ = self._shard_operands(k)
+        if self.compute != "jnp":
+            _ = layout.dev_window_mask(k)
+        if self.compute == "mxu":
+            from repro.kernels.squeeze_stencil import _mxu_operators
+            p_local = layout.macro_tiles_for(self.nb_local, k)[0]
+            _mxu_operators(self.workload, layout.rho + 2 * k, p_local)
+
+    def _local_step_k(self, state_local: Array, mask: Array, table: Array,
+                      existence: Array, k: int) -> Array:
+        """One fused depth-``k`` launch on this shard: pack strips, ONE
+        all_gather, assemble halos, run k substeps locally.
+
+        state_local (B, C, nb_local, rho, rho) -> same, k steps later;
+        ``mask``/``table``/``existence`` are this shard's rows of the
+        ``_shard_operands`` arrays.
+        """
         layout, axis = self.layout, self.axis
-        nb_padded = self.nb_padded
-        n_shards = self.n_shards
-        nbl = nb_padded // n_shards
+        rho, nbl = layout.rho, self.nb_local
+        b, nc = state_local.shape[0], state_local.shape[1]
+
+        # 1. pack my edge bands ((B, C) folded: strip plumbing is linear
+        # per leading axis)
+        flat = state_local.reshape(b * nc, nbl, rho, rho)
+        strips_local = layout.pack_edge_strips(flat, k)
+        # 2. halo exchange: ONE all_gather of strips only
+        strips = jax.lax.all_gather(strips_local, axis, axis=1, tiled=True)
+        strips = jnp.concatenate(
+            [strips,
+             jnp.zeros((strips.shape[0], 1) + strips.shape[2:],
+                       strips.dtype)], axis=1)  # ghost zero entry (row nbp)
+        # 3. assemble my blocks' depth-k halos + shard-local fused compute
+        halo = tuple(
+            h.reshape((b, nc) + h.shape[1:])
+            for h in layout.halo_from_strips_k(strips, table, k))
+
+        if self.compute == "mxu":
+            from repro.kernels.squeeze_stencil import stencil_step_mxu_k_local
+            out = stencil_step_mxu_k_local(
+                layout, state_local, halo, existence, self.workload, k=k,
+                interpret=self.interpret)
+        elif self.compute == "fused":
+            from repro.kernels.squeeze_stencil import (
+                stencil_step_fused_k_local)
+
+            def one(s, top, bot, west, east):
+                return stencil_step_fused_k_local(
+                    layout, s, (top, bot, west, east), existence,
+                    self.workload, k=k, interpret=self.interpret)
+
+            out = jax.vmap(one)(state_local, *halo)
+        else:
+            return self._jnp_step_k(state_local, halo, mask, k)
+        # the kernels gate halo regions in-kernel but keep the periodic
+        # center mask — one multiply by the mask's center re-kills padding
+        # blocks (their mask rows are all zero)
+        center = mask[:, k:k + rho, k:k + rho]
+        return out * center.astype(out.dtype)
+
+    def _jnp_step_k(self, states: Array, halo, mask: Array,
+                    k: int) -> Array:
+        """XLA window path: assemble (B, C, nbl, rho+2k, rho+2k) tiles and
+        run the workload's k fused substeps under the precomputed sharded
+        halo mask (the same per-block occupancy the single-device XLA
+        ``step_k`` reads; padding-block rows are all zero, so the k-substep
+        mask discipline and the padding gate are one multiply)."""
+        layout, wl = self.layout, self.workload
         rho = layout.rho
-        # padding blocks (ids >= n_blocks) get all-ghost rows: their halos
-        # are zero, so the life rule can never birth cells into them.
-        padded_table = np.concatenate([
-            layout.neighbor_table,
-            np.full((nb_padded - layout.n_blocks, 8), layout.ghost,
-                    np.int32)], axis=0)
+        w = rho + 2 * k
+        top, bot, west, east = halo
+        b, nc, nbl = states.shape[:3]
+        padded = jnp.zeros((b, nc, nbl, w, w), states.dtype)
+        padded = padded.at[..., k:k + rho, k:k + rho].set(states)
+        padded = padded.at[..., :k, :].set(top)
+        padded = padded.at[..., w - k:, :].set(bot)
+        padded = padded.at[..., k:k + rho, :k].set(west)
+        padded = padded.at[..., k:k + rho, w - k:].set(east)
 
-        def local_step(state_local: Array) -> Array:
-            # which shard am I / which global blocks do I own
-            idx = jax.lax.axis_index(axis)
-            local_ids = idx * nbl + jnp.arange(nbl, dtype=jnp.int32)
-            # 1. pack my edge strips
-            strips_local = _source_strips(state_local, rho)
-            # 2. halo exchange: all_gather strips only
-            strips = jax.lax.all_gather(
-                strips_local, axis, axis=0, tiled=True)
-            strips = jnp.concatenate(
-                [strips, jnp.zeros((1,) + strips.shape[1:], strips.dtype)],
-                axis=0)  # ghost
-            # 3. assemble halos + fused in-tile rule
-            halo = _halo_from_strips(layout, jnp.asarray(padded_table),
-                                     strips, local_ids)
-            return _tile_step(layout, state_local, halo)
+        def one(p):  # (C, nbl, w, w) -> (C, nbl, rho, rho)
+            if wl.n_channels > 1:
+                return wl.tile_rule_k(p, mask, k)
+            return wl.tile_rule_k(p[0], mask, k)[None]
 
-        from repro.utils.jax_compat import shard_map
-        step = shard_map(
-            local_step, mesh=self.mesh,
-            in_specs=P(self.axis, None, None),
-            out_specs=P(self.axis, None, None))
-        return jax.jit(step)
+        return jax.vmap(one)(padded).astype(states.dtype)
 
+    def _step5_fn(self, k: int, donate: bool = False):
+        """Jitted shard_map'd fused step over canonical 5D states plus the
+        sharded static operands (mask, table, existence)."""
+        def build():
+            self._materialize(k)
+            from repro.utils.jax_compat import shard_map
+            spec = self.state_spec(5)
+            # pallas_call has no shard_map replication rule: the kernel
+            # computes must disable the (conservative) rep check
+            step = shard_map(
+                functools.partial(self._local_step_k, k=k), mesh=self.mesh,
+                in_specs=(spec, P(self.axis, None, None),
+                          P(self.axis, None), P(self.axis, None)),
+                out_specs=spec,
+                check_rep=self.compute == "jnp")
+            return jax.jit(step, donate_argnums=0) if donate \
+                else jax.jit(step)
+        return self._memo(("step5", k, donate), build)
+
+    def _call_step(self, k: int, s5: Array, donate: bool = False) -> Array:
+        return self._step5_fn(k, donate)(s5, *self._shard_operands(k))
+
+    def _loop_fn(self, k: int, donate: bool):
+        """Jitted fori_loop of fused launches; the launch count is a
+        *traced* scalar, so changing ``steps`` does not retrace."""
+        def build():
+            step = self._step5_fn(k)
+
+            def body(s5, n, mask, table, existence):
+                return jax.lax.fori_loop(
+                    0, n, lambda _, s: step(s, mask, table, existence), s5)
+
+            return jax.jit(body, donate_argnums=0) if donate \
+                else jax.jit(body)
+        return self._memo(("loop", k, donate), build)
+
+    # ------------------------------------------------------------ public API
     def step(self, state: Array) -> Array:
-        return self._step_fn(state)
+        """One step (one halo all-gather)."""
+        return self.step_k(state, 1)
 
-    def run(self, state: Array, steps: int) -> Array:
-        @jax.jit
-        def body(s):
-            return jax.lax.fori_loop(
-                0, steps, lambda _, x: self._step_fn(x), s)
-        # fori_loop over an already-jitted shard_map keeps one compilation
-        return body(state)
+    def step_k(self, state: Array, k: int) -> Array:
+        """``k`` exact steps in one fused launch: ONE halo all-gather of
+        depth-``k`` strips, then k shard-local substeps (1 <= k <= rho)."""
+        if not (1 <= k <= self.layout.rho):
+            raise ValueError(
+                f"need 1 <= k <= rho={self.layout.rho}, got k={k}")
+        s5, batched = self._canon(state)
+        out = self._call_step(k, s5)
+        self._account(k, 1, s5.shape[0])
+        return self._uncanon(out, batched)
+
+    def step_batched(self, states: Array) -> Array:
+        return self.step_k(states, 1)
+
+    def step_k_batched(self, states: Array, k: int) -> Array:
+        return self.step_k(states, k)
+
+    @property
+    def supports_native_batch(self) -> bool:
+        """B simulations advance through one shard_map step whose strip
+        exchange is a single batched all-gather (every compute backend;
+        'mxu' additionally runs one (B, n_macro_local) kernel grid)."""
+        return True
+
+    def run(self, state: Array, steps: int, donate: bool = False) -> Array:
+        """``steps`` steps tiled into floor(steps/k) fused depth-k launches
+        plus ONE remainder launch of depth steps % k — exactly
+        ceil(steps/k) halo all-gathers total. ``donate=True`` donates the
+        state buffer to XLA (zero-copy stepping; the caller must not reuse
+        ``state`` afterwards)."""
+        steps = int(steps)
+        if steps < 0:
+            raise ValueError(f"steps must be >= 0, got {steps}")
+        s5, batched = self._canon(state)
+        b = s5.shape[0]
+        k = self.effective_fusion_k
+        n_fused, rem = divmod(steps, k)
+        if n_fused:
+            s5 = self._loop_fn(k, donate)(
+                s5, jnp.asarray(n_fused, jnp.int32),
+                *self._shard_operands(k))
+            self._account(k, n_fused, b)
+        if rem:
+            s5 = self._call_step(rem, s5, donate)
+            self._account(rem, 1, b)
+        return self._uncanon(s5, batched)
+
+    def lowered_step_text(self, state: Array, k: int) -> str:
+        """Lowered StableHLO of one fused depth-``k`` launch — the tests
+        count its collectives (exactly one all_gather per launch)."""
+        s5, _ = self._canon(state)
+        return self._step5_fn(k).lower(
+            s5, *self._shard_operands(k)).as_text()
 
 
 def make_distributed_engine(layout: BlockLayout, mesh: Optional[Mesh] = None,
-                            axis: str = "data") -> DistributedSqueezeEngine:
+                            axis: str = "data",
+                            workload: StencilWorkload = LIFE,
+                            compute: str = "jnp",
+                            fusion_k: Optional[int] = None,
+                            interpret: Optional[bool] = None
+                            ) -> DistributedSqueezeEngine:
+    """Engine over ``mesh`` (default: all devices on one "data" axis)."""
     if mesh is None:
-        devs = jax.devices()
-        mesh = Mesh(devs, ("data",))
+        mesh = Mesh(jax.devices(), ("data",))
         axis = "data"
-    return DistributedSqueezeEngine(layout, mesh, axis)
+    return DistributedSqueezeEngine(layout, mesh, axis, workload, compute,
+                                    fusion_k, interpret)

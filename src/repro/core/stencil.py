@@ -355,23 +355,35 @@ class SqueezePallasEngine(_FusedStepping):
         return self.workload.n_channels * self.layout.memory_bytes(dtype_size)
 
 
+#: distributed engine kinds -> shard-local compute backend
+_DIST_KINDS = {"dist-block": "jnp", "dist-fused": "fused",
+               "dist-mxu": "mxu"}
+
+
 def make_engine(kind: str, frac: NBBFractal, r: int, m: int = 0,
                 workload: StencilWorkload = LIFE,
-                fusion_k: Optional[int] = None):
+                fusion_k: Optional[int] = None, mesh=None, axis: str = "data"):
     """Engine factory.
 
     kind: 'bb' | 'lambda' | 'cell' | 'block' | 'pallas-blocks' |
-          'pallas-strips' | 'pallas-fused' | 'pallas-mxu'
+          'pallas-strips' | 'pallas-fused' | 'pallas-mxu' |
+          'dist-block' | 'dist-fused' | 'dist-mxu'
           ('pallas' = 'pallas-strips').
     ``m`` (block level, rho = s**m) and ``fusion_k`` (temporal-fusion
-    depth for ``run``; None = heuristic) only apply to the block/pallas
-    kinds — the expanded-space and cell engines have no block tiles to
-    fuse over. 'pallas-mxu' is the v5 stencil-as-matmul kernel: the Moore
-    aggregation runs as rank-1 banded MXU contractions on lane-packed
-    multi-block macro-tiles, and it is the only kind with a *native*
-    batch grid (``step_batched``; the ``BatchedRunner`` dispatches one
-    kernel over (B, n_macro_tiles) instead of vmapping pallas_call) —
-    see DESIGN.md Section 2.2 for when it beats 'pallas-strips'/v4.
+    depth for ``run``; None = heuristic) only apply to the block/pallas/
+    dist kinds — the expanded-space and cell engines have no block tiles
+    to fuse over. 'pallas-mxu' is the v5 stencil-as-matmul kernel: the
+    Moore aggregation runs as rank-1 banded MXU contractions on
+    lane-packed multi-block macro-tiles with a *native* batch grid
+    (``step_batched``) — see DESIGN.md Section 2.2.
+
+    The 'dist-*' kinds are the multi-device engine of
+    ``core/distributed.py``: the compact block domain sharded over
+    ``mesh``'s ``axis`` (default: all devices on one "data" axis) with a
+    k-fused strip halo exchange (one all-gather per k steps) and the
+    named shard-local compute backend — 'dist-block' is the XLA window
+    path, 'dist-fused' the v4 fused-depth kernel, 'dist-mxu' the v5 MXU
+    macro-tile kernel. See DESIGN.md Section 4.
     """
     from repro.core.baselines import LambdaEngine
     if kind == "bb":
@@ -383,6 +395,12 @@ def make_engine(kind: str, frac: NBBFractal, r: int, m: int = 0,
     if kind == "block":
         return SqueezeBlockEngine(BlockLayout(frac, r, m), workload,
                                   fusion_k=fusion_k)
+    if kind in _DIST_KINDS:
+        from repro.core.distributed import make_distributed_engine
+        return make_distributed_engine(
+            BlockLayout(frac, r, m), mesh=mesh, axis=axis,
+            workload=workload, compute=_DIST_KINDS[kind],
+            fusion_k=fusion_k)
     if kind == "pallas":
         kind = "pallas-strips"
     if kind.startswith("pallas-"):

@@ -64,7 +64,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.compact import BlockLayout
+from repro.core.compact import BlockLayout, halo_regions
 from repro.kernels.common import resolve_interpret
 from repro.workloads.base import StencilWorkload, halo_needs
 from repro.workloads.rules import LIFE
@@ -383,13 +383,8 @@ def _stencil_step_fused(layout: BlockLayout, state: jnp.ndarray,
 # ======================================================================
 # v4: temporal fusion — depth-k halo gathered once, k substeps in VMEM
 # ======================================================================
-def _halo_regions(rho: int, k: int):
-    """The 8 (ys, xs) window slices of the depth-k halo frame, in
-    MOORE_DIRS order (NW, N, NE, W, E, SW, S, SE)."""
-    w = rho + 2 * k
-    lo, mid, hi = slice(0, k), slice(k, k + rho), slice(k + rho, w)
-    return ((lo, lo), (lo, mid), (lo, hi), (mid, lo), (mid, hi),
-            (hi, lo), (hi, mid), (hi, hi))
+#: re-exported from core.compact (the distributed engine shares it)
+_halo_regions = halo_regions
 
 
 def _fused_k_kernel(workload, k, ex_ref, c_ref, top_ref, bot_ref, west_ref,
@@ -717,6 +712,116 @@ def stencil_step_mxu_k(layout: BlockLayout, state: jnp.ndarray,
     reusing the v4 mask discipline (k <= rho)."""
     return stencil_step_mxu_batched(layout, state[None], workload, k=k,
                                     interpret=interpret)[0]
+
+
+# ======================================================================
+# shard-local entry points — the distributed engine's compute halves.
+#
+# core/distributed.py exchanges depth-k edge strips (ONE all_gather per k
+# steps) and assembles the same halo-piece shapes ``_gather_halo_k``
+# produces; these entries run the v4 / v5 kernels on one shard's local
+# blocks given those pre-assembled pieces. They are traced inline inside
+# shard_map (no jit wrapper here — the enclosing distributed step is the
+# compilation unit), and the caller materializes the static geometry
+# (dev_window_mask, MXU operators) outside the trace.
+# ======================================================================
+def stencil_step_fused_k_local(layout: BlockLayout, state: jnp.ndarray,
+                               halo, existence: jnp.ndarray,
+                               workload: StencilWorkload, *, k: int,
+                               interpret: Optional[bool] = None
+                               ) -> jnp.ndarray:
+    """Shard-local v4: ``k`` fused substeps over local blocks.
+
+    state (C, nbl, rho, rho); ``halo`` = (top, bot, west, east) with
+    top/bot (C, nbl, k, rho+2k) and west/east (C, nbl, rho, k);
+    ``existence`` (nbl, 8) int32 {0,1} Moore-neighbor existence of the
+    local blocks (padding blocks: all zero). Returns (C, nbl, rho, rho).
+    """
+    rho = layout.rho
+    nc, nbl = state.shape[0], state.shape[1]
+    w = rho + 2 * k
+    top, bot, west, east = halo
+    blk = lambda *shape: pl.BlockSpec(shape, lambda i, ex: (0, i) + (0,) * (len(shape) - 2))  # noqa: E731,E501
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nbl,),
+        in_specs=[
+            blk(nc, 1, rho, rho),
+            blk(nc, 1, k, w), blk(nc, 1, k, w),      # top, bot rows
+            blk(nc, 1, rho, k), blk(nc, 1, rho, k),  # west, east cols
+            pl.BlockSpec((w, w), lambda i, ex: (0, 0)),
+        ],
+        out_specs=blk(nc, 1, rho, rho),
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_k_kernel, workload, k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nc, nbl, rho, rho), workload.dtype),
+        interpret=resolve_interpret(interpret),
+    )(existence, state, top, bot, west, east, layout.dev_window_mask(k))
+
+
+def stencil_step_mxu_k_local(layout: BlockLayout, states: jnp.ndarray,
+                             halo, existence: jnp.ndarray,
+                             workload: StencilWorkload, *, k: int,
+                             interpret: Optional[bool] = None
+                             ) -> jnp.ndarray:
+    """Shard-local v5: ``k`` MXU macro-tile substeps of B simulations over
+    local blocks, one (B, n_macro_local) grid.
+
+    states (B, C, nbl, rho, rho); ``halo`` pieces carry matching (B, C)
+    leading axes; ``existence`` (nbl, 8) as in the v4 local entry. The
+    local blocks are lane-packed with ``macro_tiles_for(nbl, k)`` — each
+    shard gets its own macro-tile geometry, sharing the kernel body,
+    window mask and MXU operators with the single-device v5 path.
+    """
+    rho = layout.rho
+    b, nc, nbl = states.shape[0], states.shape[1], states.shape[2]
+    w = rho + 2 * k
+    p, n_macro, nb_pad = layout.macro_tiles_for(nbl, k)
+    top, bot, west, east = halo
+
+    def pack(arr):  # (B, C, nbl, h, cols) -> (B, C, n_macro, h, P*cols)
+        flat = arr.reshape((b * nc,) + arr.shape[2:])
+        m = _pack_macro(flat, nbl, p, n_macro)
+        return m.reshape((b, nc) + m.shape[1:])
+
+    cm, topm, botm = pack(states), pack(top), pack(bot)
+    westm, eastm = pack(west), pack(east)
+    rm, ct = _mxu_operators(workload, w, p)
+    n_terms = rm.shape[0]
+    ex_pad = jnp.concatenate(
+        [existence,
+         jnp.zeros((nb_pad - nbl, 8), existence.dtype)], axis=0)
+
+    def blk(h, cols):
+        return pl.BlockSpec((1, nc, 1, h, cols),
+                            lambda bi, i, ex: (bi, 0, i, 0, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, n_macro),
+        in_specs=[
+            blk(rho, p * rho),
+            blk(k, p * w), blk(k, p * w),      # top, bot macro rows
+            blk(rho, p * k), blk(rho, p * k),  # west, east macro cols
+            pl.BlockSpec((w, w), lambda bi, i, ex: (0, 0)),
+            pl.BlockSpec((n_terms, w, w), lambda bi, i, ex: (0, 0, 0)),
+            pl.BlockSpec((n_terms, p * w, p * w),
+                         lambda bi, i, ex: (0, 0, 0)),
+        ],
+        out_specs=blk(rho, p * rho),
+    )
+    out = pl.pallas_call(
+        functools.partial(_mxu_kernel, workload, k, p, n_terms),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, nc, n_macro, rho, p * rho),
+                                       workload.dtype),
+        interpret=resolve_interpret(interpret),
+    )(ex_pad, cm, topm, botm, westm, eastm,
+      layout.dev_window_mask(k), jnp.asarray(rm), jnp.asarray(ct))
+    out = out.reshape(b, nc, n_macro, rho, p, rho).transpose(0, 1, 2, 4, 3, 5)
+    return out.reshape(b, nc, n_macro * p, rho, rho)[:, :, :nbl]
 
 
 # ======================================================================

@@ -5,7 +5,7 @@ Serving caches:
   * sliding-window layers keep a **ring buffer** of exactly ``window``
     slots (slot = pos % window) — the expanded->compact index map
     nu_ring(t) = t mod W, the temporal analogue of the paper's compact
-    scheme (DESIGN.md Section 5): O(W) memory regardless of stream length,
+    scheme: O(W) memory regardless of stream length,
     which is what makes long_500k decode feasible for windowed archs.
 
 Keys/values are RoPE-rotated *before* caching, so ring overwrites need no

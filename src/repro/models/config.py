@@ -20,6 +20,13 @@ class MoESpec:
     #: Arctic-style dense residual MLP running in parallel with the experts
     dense_residual_ff: Optional[int] = None
     aux_loss_weight: float = 0.01
+    #: token groups for capacity-bounded dispatch. None = derive from the
+    #: mesh's batch-sharding degree (shard-local dispatch; the math then
+    #: DEPENDS on the mesh, because capacity is bounded per group). Set it
+    #: explicitly to pin the dispatch semantics independently of how the
+    #: step is sharded — e.g. the sharded-equality suite pins it so the
+    #: unsharded reference drops the same tokens as the 8-device run.
+    dispatch_groups: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)

@@ -4,7 +4,7 @@ dispatch (GShard-style), sort-based (no O(T*E*C) one-hot tensors).
 Tokens live in the expanded [B*S] domain; experts compute in compact
 [E, C] buffers; gather/scatter maps translate between the two — the same
 compact/expanded storage duality as the paper's fractal scheme, with a
-data-dependent (router) map instead of a static one (DESIGN.md Section 5).
+data-dependent (router) map instead of a static one.
 
 Supports Mixtral (8e top-2) and Arctic (128e top-2 + parallel dense
 residual MLP). Router in fp32; returns the switch-style load-balance aux
@@ -108,13 +108,22 @@ def _expert_ffn(p, expert_in: Array, cfg: ModelConfig) -> Array:
 
 def n_token_groups(cfg: ModelConfig, mesh: Optional[Mesh], n_tokens: int
                    ) -> int:
-    """Shard-local dispatch group count = the batch-sharding degree."""
-    if mesh is None:
-        return 1
-    axes = MeshAxes().present(mesh)
-    g = 1
-    for a in axes.batch:
-        g *= mesh.shape[a]
+    """Capacity-dispatch group count.
+
+    ``cfg.moe.dispatch_groups`` pins it explicitly (the group count is
+    *semantic*: capacity is bounded per group, so different groupings drop
+    different tokens — an unsharded reference must group identically to
+    reproduce a sharded run). Default (None) derives it from the mesh's
+    batch-sharding degree, keeping every dispatch gather/scatter local to
+    a data shard."""
+    g = cfg.moe.dispatch_groups
+    if g is None:
+        if mesh is None:
+            return 1
+        axes = MeshAxes().present(mesh)
+        g = 1
+        for a in axes.batch:
+            g *= mesh.shape[a]
     return g if (g > 1 and n_tokens % g == 0) else 1
 
 
@@ -148,8 +157,12 @@ def apply_moe(p, x: Array, cfg: ModelConfig, mesh: Optional[Mesh] = None
         expert_out = _expert_ffn(p, expert_in, cfg)
         out = _combine_compact(expert_out, dest, st, sg, t)
     else:
-        axes = MeshAxes().present(mesh)
-        lead = axes.batch
+        # grouping may also run meshless (dispatch_groups pinned in the
+        # config): every constraint degrades to identity, the math is
+        # identical to the sharded shard-local dispatch
+        axes = (MeshAxes().present(mesh) if mesh is not None
+                else MeshAxes(batch=(), fsdp=None, model=None))
+        lead = axes.batch if axes.batch else None
         xg = xf.reshape(g, t_local, d)
         xg = constraint(xg, mesh, P(lead, None, None))
         # grouped buffers (g, E, C, d): groups pinned to the batch shards

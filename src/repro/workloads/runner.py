@@ -21,6 +21,12 @@ r, m, workload, k)``. This module provides the building block:
   * an LRU cache of those compiled engines keyed by the static tuple, so
     a serving process pays tracing/compilation once per configuration, not
     once per request;
+  * multi-device placement: with a ``mesh``, regular kinds shard the
+    BATCH axis (whole simulations spread across devices — many small
+    fractals) while the 'dist-*' kinds shard the BLOCK axis (one fractal
+    too large per device, k-fused strip halo exchange — see
+    core/distributed.py and DESIGN.md Section 4); the mesh and fusion
+    depth are part of the cache key;
   * trace/build counters (``RunnerStats``) so reuse is *testable* — the
     suite asserts >= 8 concurrent simulations share one compiled engine.
 
@@ -44,13 +50,21 @@ if TYPE_CHECKING:  # annotation-only; keeps runtime free of core imports
 Array = jnp.ndarray
 
 #: static configuration of one simulation family:
-#: (kind, fractal, r, m, workload, k). The fractal stays ``Hashable`` here
-#: so this module needs nothing from ``repro.core`` at import time.
-Key = Tuple[str, Hashable, int, int, StencilWorkload, int]
+#: (kind, fractal, r, m, workload, k, mesh, axis). The fractal stays
+#: ``Hashable`` here so this module needs nothing from ``repro.core`` at
+#: import time; ``mesh`` is None for single-device kinds (jax Meshes are
+#: hashable, so a multi-device placement is part of the cache identity).
+Key = Tuple[str, Hashable, int, int, StencilWorkload, int,
+            Optional[Hashable], str]
 
 #: engine kinds with block tiles (these support temporal fusion; for the
 #: rest k normalizes to 1 so equal configurations share a cache slot)
-_BLOCK_KINDS_PREFIX = ("block", "pallas")
+_BLOCK_KINDS_PREFIX = ("block", "pallas", "dist")
+
+
+def _is_dist(kind: str) -> bool:
+    """Multi-device engine kinds (block-axis sharding over a mesh)."""
+    return kind.startswith("dist-")
 
 
 @dataclasses.dataclass
@@ -95,11 +109,14 @@ class BatchedRunner:
         return k
 
     def _get(self, kind: str, frac: NBBFractal, r: int, m: int,
-             workload: StencilWorkload, k: Optional[int] = None) -> _Entry:
+             workload: StencilWorkload, k: Optional[int] = None,
+             mesh=None, axis: str = "data") -> _Entry:
         if kind == "pallas":  # make_engine's alias; one cache slot, not two
             kind = "pallas-strips"
         k = self._resolve_k(kind, frac, m, k)
-        key: Key = (kind, frac, r, m, workload, k)
+        if not _is_dist(kind):
+            mesh = None  # placement-only for non-dist kinds; one slot
+        key: Key = (kind, frac, r, m, workload, k, mesh, axis)
         entry = self._cache.get(key)
         if entry is not None:
             self._cache.move_to_end(key)
@@ -109,7 +126,21 @@ class BatchedRunner:
         # the resolved k always becomes the engine's fusion depth on block
         # kinds — an explicit k=1 must mean "no fusion", not "heuristic"
         engine = make_engine(kind, frac, r, m, workload=workload,
-                             fusion_k=k if is_block else None)
+                             fusion_k=k if is_block else None,
+                             mesh=mesh, axis=axis)
+        if _is_dist(kind):
+            # the distributed engine owns its jit cache, its fused-launch
+            # tiling (exactly ceil(steps/k) collectives) and its exchange
+            # accounting — the runner must not wrap it in another jit, or
+            # the Python-side collective counters would only run at trace
+            # time. Its step/run handle (B, C?, nb_padded, rho, rho)
+            # natively (one batched strip all-gather per launch).
+            entry = _Entry(engine, engine.step_batched,
+                           lambda states, steps: engine.run(
+                               states, int(steps)),
+                           lambda states, steps: engine.run(
+                               states, int(steps), donate=True))
+            return self._insert(key, entry)
         fused = is_block and k > 1
         stats = self.stats
         # the v5 'mxu' engine advances the whole batch through ONE kernel
@@ -154,57 +185,92 @@ class BatchedRunner:
             # XLA step_k tables, outside traces; the pallas kinds build
             # their (smaller) v4 set in the kernel entry point
             engine.layout.materialize_halo(k)
-        entry = _Entry(engine, batched_step, jax.jit(_run),
-                       jax.jit(_run, donate_argnums=0))
+        return self._insert(key, _Entry(engine, batched_step,
+                                        jax.jit(_run),
+                                        jax.jit(_run, donate_argnums=0)))
+
+    def _insert(self, key: Key, entry: _Entry) -> _Entry:
+        """Shared cache insert + build accounting + LRU eviction."""
         self._cache[key] = entry
-        stats.builds += 1
+        self.stats.builds += 1
         if len(self._cache) > self.capacity:
             self._cache.popitem(last=False)
-            stats.evictions += 1
+            self.stats.evictions += 1
         return entry
 
     def engine_for(self, kind: str, frac: NBBFractal, r: int, m: int = 0,
                    workload: StencilWorkload = LIFE,
-                   k: Optional[int] = None):
+                   k: Optional[int] = None, mesh=None, axis: str = "data"):
         """The (cached) underlying single-simulation engine."""
-        return self._get(kind, frac, r, m, workload, k).engine
+        return self._get(kind, frac, r, m, workload, k, mesh, axis).engine
 
     def cache_size(self) -> int:
         return len(self._cache)
 
+    # --------------------------------------------------------- mesh placement
+    @staticmethod
+    def place_batch(states: Array, mesh, axis: str = "data") -> Array:
+        """Shard a batch of independent simulations over ``mesh``'s
+        ``axis`` along the BATCH dimension (each device owns whole
+        simulations — no halo traffic; the right placement for many small
+        fractals). For one fractal too large per device, use the
+        'dist-*' kinds instead: they shard the BLOCK axis and exchange
+        k-fused halo strips (see DESIGN.md Section 4)."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        spec = PartitionSpec(axis, *([None] * (states.ndim - 1)))
+        return jax.device_put(states, NamedSharding(mesh, spec))
+
     # ---------------------------------------------------------- batched API
     def init_batch(self, kind: str, frac: NBBFractal, r: int,
                    seeds, m: int = 0,
-                   workload: StencilWorkload = LIFE) -> Array:
-        """Stack independent initial states: (B, *state_shape)."""
-        engine = self.engine_for(kind, frac, r, m, workload)
-        return jnp.stack([engine.init_random(int(s)) for s in seeds])
+                   workload: StencilWorkload = LIFE,
+                   mesh=None, axis: str = "data") -> Array:
+        """Stack independent initial states: (B, *state_shape). With a
+        ``mesh``, 'dist-*' kinds come back sharded over the BLOCK axis
+        (one fractal spread across devices); every other kind is sharded
+        over the BATCH axis (whole simulations spread across devices)."""
+        engine = self.engine_for(kind, frac, r, m, workload, None, mesh,
+                                 axis)
+        if _is_dist(kind):
+            return engine.init_batch(seeds)
+        states = jnp.stack([engine.init_random(int(s)) for s in seeds])
+        if mesh is not None:
+            states = self.place_batch(states, mesh, axis)
+        return states
 
     def step(self, kind: str, frac: NBBFractal, r: int, states: Array,
-             m: int = 0, workload: StencilWorkload = LIFE) -> Array:
+             m: int = 0, workload: StencilWorkload = LIFE,
+             mesh=None, axis: str = "data") -> Array:
         """One step of B independent simulations, one compiled call."""
-        return self._get(kind, frac, r, m, workload).batched_step(states)
+        return self._get(kind, frac, r, m, workload, None, mesh,
+                         axis).batched_step(states)
 
     def run(self, kind: str, frac: NBBFractal, r: int, states: Array,
             steps: int, m: int = 0,
             workload: StencilWorkload = LIFE,
-            k: Optional[int] = None, donate: bool = False) -> Array:
+            k: Optional[int] = None, donate: bool = False,
+            mesh=None, axis: str = "data") -> Array:
         """``steps`` steps of B independent simulations, tiled into
         floor(steps/k) fused k-step launches plus a steps%k single-step
         remainder (``k=None``: the engine heuristic; non-block kinds step
         singly). ``steps`` is a dynamic fori_loop bound: changing it does
-        not retrace. ``donate=True`` hands the ``states`` buffer to XLA
-        for in-place reuse — zero-copy steady-state stepping; the caller
-        must not use ``states`` afterwards."""
-        entry = self._get(kind, frac, r, m, workload, k)
+        not retrace (the 'dist-*' kinds instead tile in the engine so the
+        collective count is exactly ceil(steps/k); their remainder launch
+        compiles once per distinct steps%k, bounded by k).
+        ``donate=True`` hands the ``states`` buffer to XLA for in-place
+        reuse — zero-copy steady-state stepping; the caller must not use
+        ``states`` afterwards."""
+        entry = self._get(kind, frac, r, m, workload, k, mesh, axis)
         fn = entry.batched_run_donated if donate else entry.batched_run
         return fn(states, jnp.asarray(steps, jnp.int32))
 
     def to_expanded(self, kind: str, frac: NBBFractal, r: int,
                     states: Array, m: int = 0,
-                    workload: StencilWorkload = LIFE) -> Array:
+                    workload: StencilWorkload = LIFE,
+                    mesh=None, axis: str = "data") -> Array:
         """Batched conversion to the (B, C?, n, n) expanded embedding."""
-        engine = self.engine_for(kind, frac, r, m, workload)
+        engine = self.engine_for(kind, frac, r, m, workload, None, mesh,
+                                 axis)
         if hasattr(engine, "to_expanded"):
             return jax.vmap(engine.to_expanded)(states)
         return states  # BB/lambda states are already expanded

@@ -1,53 +1,83 @@
-"""Subprocess body for the multi-device distributed-stencil test.
+"""Subprocess SMOKE body for the multi-device distributed-stencil test.
 
 Run with 8 placeholder host devices (the flag must precede any jax import,
 and must NOT leak into the main pytest process — see dryrun.py's same
-pattern), compares the shard_map engine against the single-device oracle.
+pattern). The full parity matrix lives in-process in
+tests/test_distributed_fused.py; this smoke keeps one real 8-shard mesh
+in the loop: a couple of fractals, every shard-local compute backend,
+fused and unfused depths, the exchange accounting, and the structural
+one-all-gather-per-launch check against the lowered 8-device HLO.
 """
 import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
+import math  # noqa: E402
+
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.core import fractals  # noqa: E402
 from repro.core.compact import BlockLayout  # noqa: E402
 from repro.core.distributed import make_distributed_engine  # noqa: E402
 from repro.core.stencil import SqueezeBlockEngine  # noqa: E402
+from repro.workloads.rules import GRAY_SCOTT, LIFE  # noqa: E402
+
+
+def check(frac, r, m, workload, compute, k, steps=5):
+    layout = BlockLayout(frac, r, m)
+    dist = make_distributed_engine(layout, workload=workload,
+                                   compute=compute, fusion_k=k,
+                                   interpret=True)
+    local = SqueezeBlockEngine(layout, workload, fusion_k=1)
+
+    s_dist = dist.init_random(seed=13)
+    s_local = local.init_random(seed=13)
+    np.testing.assert_array_equal(
+        np.asarray(dist.to_dense(s_dist)), np.asarray(s_local))
+
+    s_dist = dist.run(s_dist, steps)
+    for _ in range(steps):
+        s_local = local.step(s_local)
+    got = np.asarray(dist.to_dense(s_dist))
+    want = np.asarray(s_local)
+    tag = f"{frac.name}/{workload.name}/{compute}/k={k}"
+    if workload.dtype == np.uint8:
+        np.testing.assert_array_equal(got, want, err_msg=tag)
+    else:
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5,
+                                   err_msg=tag)
+
+    # padding blocks must stay dead
+    pad = np.asarray(s_dist)[..., layout.n_blocks:, :, :]
+    assert (pad == 0).all(), f"{tag}: padding blocks came alive"
+
+    # exactly ceil(steps/k) halo all-gathers
+    st = dist.exchange_stats()
+    assert st.steps == steps, st
+    assert st.collectives == math.ceil(steps / k), (tag, st)
+    print(f"{tag}: distributed == single-device over {steps} steps, "
+          f"{st.collectives} collectives")
+    return dist
 
 
 def main():
     assert jax.device_count() == 8, jax.devices()
     for frac, r, m in [(fractals.SIERPINSKI, 6, 2),
-                       (fractals.CARPET, 3, 1),
-                       (fractals.VICSEK, 4, 1)]:
-        layout = BlockLayout(frac, r, m)
-        dist = make_distributed_engine(layout)
-        local = SqueezeBlockEngine(layout)
+                       (fractals.CARPET, 3, 1)]:
+        for compute in ("jnp", "fused", "mxu"):
+            check(frac, r, m, LIFE, compute, k=2)
+    check(fractals.SIERPINSKI, 6, 2, LIFE, "jnp", k=1)
+    check(fractals.SIERPINSKI, 6, 2, GRAY_SCOTT, "mxu", k=2)
 
-        s_dist = dist.init_random(seed=13)
-        s_local = local.init_random(seed=13)
-        np.testing.assert_array_equal(
-            np.asarray(dist.to_dense(s_dist)), np.asarray(s_local))
-
-        for step in range(5):
-            s_dist = dist.step(s_dist)
-            s_local = local.step(s_local)
-            np.testing.assert_array_equal(
-                np.asarray(dist.to_dense(s_dist)), np.asarray(s_local),
-                err_msg=f"{frac.name} diverged at step {step}")
-
-        # padding blocks must stay dead
-        pad = np.asarray(s_dist)[layout.n_blocks:]
-        assert (pad == 0).all(), "padding blocks came alive"
-
-        # multi-step driver agrees with iterated step
-        s2 = dist.run(dist.init_random(seed=13), 5)
-        np.testing.assert_array_equal(np.asarray(dist.to_dense(s2)),
-                                      np.asarray(s_local))
-        print(f"{frac.name}: distributed == single-device over 5 steps")
+    # structural: ONE all_gather in the lowered 8-shard fused step
+    layout = BlockLayout(fractals.SIERPINSKI, 6, 2)
+    dist = make_distributed_engine(layout, workload=LIFE, compute="jnp",
+                                   fusion_k=2, interpret=True)
+    txt = dist.lowered_step_text(dist.init_random(0), 2)
+    n_ag = txt.count('"stablehlo.all_gather"')
+    assert n_ag == 1, f"expected 1 all_gather in the fused step, got {n_ag}"
+    print("fused step lowers to exactly one all_gather")
     print("DISTRIBUTED_OK")
 
 

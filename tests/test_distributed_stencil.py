@@ -1,5 +1,7 @@
-"""Multi-device (8 placeholder CPU devices) distributed compact stencil:
-shard_map strip halo exchange vs the single-device engine.
+"""Multi-device (8 placeholder CPU devices) distributed compact stencil
+SMOKE: k-fused strip halo exchange + shard-local kernels vs the
+single-device engine on a real 8-shard mesh. The full parity matrix
+(workload x k x kind) is in-process in test_distributed_fused.py.
 
 Runs in a subprocess so --xla_force_host_platform_device_count never leaks
 into this process (smoke tests must see 1 device)."""
