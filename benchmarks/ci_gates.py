@@ -1,0 +1,99 @@
+"""One entry point for the CI perf-gate matrix.
+
+The workflow used to carry four copy-pasted inline bench invocations
+(workloads smoke, fusion, mxu, distributed) whose thresholds, output
+paths and env quirks lived in YAML. This script owns all of that:
+
+    PYTHONPATH=src python benchmarks/ci_gates.py --gate <name>
+    PYTHONPATH=src python benchmarks/ci_gates.py --list
+
+one gate per CI matrix entry ({workloads, fusion, mxu, distributed,
+3d}). Each gate shells out to its bench script in a fresh interpreter —
+deliberately: the distributed gate must set XLA_FLAGS before jax is
+imported (it forces the 8-device host-platform mesh), and a subprocess
+keeps every gate's device/backend state isolated from this process and
+from the other gates. The bench scripts keep their own parity
+assertions; the *thresholds* and JSON artifact paths are pinned here so
+the workflow matrix calls this with one flag and nothing else.
+
+Exit status is the bench's: nonzero on parity breakage or a speedup
+below the gate threshold. The JSON is written before the gate check,
+so a failing run still leaves its timings behind for the artifact
+upload (`if: always()`).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pathlib
+import subprocess
+import sys
+
+BENCH_DIR = pathlib.Path(__file__).resolve().parent
+
+#: gate name -> (bench script, args, extra env). Thresholds and output
+#: paths live HERE, not in the workflow and not in bench defaults.
+GATES = {
+    # every (workload, engine, batch) combination runs end to end
+    "workloads": ("workloads_bench.py",
+                  ["--smoke", "--no-fusion", "--out",
+                   "BENCH_workloads.json"], {}),
+    # fused k>=2 stepping must beat single stepping somewhere (parity
+    # asserted per configuration first)
+    "fusion": ("workloads_bench.py",
+               ["--smoke", "--fusion-only", "--min-speedup", "1.0",
+                "--fusion-out", "BENCH_fusion.json"], {}),
+    # v5 stencil-as-matmul vs pallas-strips at a block count large
+    # enough to exercise the macro-tile grid: geomean batched speedup
+    # at rho <= 9 must reach 1.5x (bit-exact CA / 1e-5 PDE parity)
+    "mxu": ("workloads_bench.py",
+            ["--mxu-only", "--r", "7", "--mxu-ms", "2", "--mxu-batches",
+             "8", "--min-speedup", "1.5", "--mxu-out",
+             "BENCH_mxu.json"], {}),
+    # k-fused strip halo exchange vs every-step exchange on the 8-device
+    # host-platform CPU mesh; geomean best fused per-step speedup on the
+    # largest mesh must reach 1.5x. XLA_FLAGS is set by the bench itself
+    # before importing jax — which is exactly why it needs its own
+    # interpreter.
+    "distributed": ("distributed_bench.py",
+                    ["--gate", "1.5", "--out",
+                     "BENCH_distributed.json"], {}),
+    # 3D stack: block3d fused k-stepping vs the cell3d per-cell engine
+    # across r x rho x k (parity per configuration); geomean best fused
+    # speedup must reach 1.5x
+    "3d": ("stencil3d_bench.py",
+           ["--smoke", "--min-speedup", "1.5", "--out",
+            "BENCH_3d.json"], {}),
+}
+
+
+def run_gate(name: str) -> int:
+    script, args, extra_env = GATES[name]
+    env = dict(os.environ, **extra_env)
+    # the benches import repro; make a bare `python benchmarks/ci_gates
+    # .py` work outside CI too
+    root = str(BENCH_DIR.parent / "src")
+    env["PYTHONPATH"] = (root + os.pathsep + env["PYTHONPATH"]
+                         if env.get("PYTHONPATH") else root)
+    cmd = [sys.executable, str(BENCH_DIR / script), *args]
+    print(f"[ci_gates] {name}: {' '.join(cmd)}", flush=True)
+    return subprocess.call(cmd, env=env)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--gate", choices=sorted(GATES),
+                    help="which perf gate to run")
+    ap.add_argument("--list", action="store_true",
+                    help="print the gate names (the CI matrix) and exit")
+    args = ap.parse_args()
+    if args.list:
+        print("\n".join(sorted(GATES)))
+        return
+    if not args.gate:
+        ap.error("--gate is required (or --list)")
+    raise SystemExit(run_gate(args.gate))
+
+
+if __name__ == "__main__":
+    main()

@@ -14,9 +14,7 @@ import json
 import os
 
 from repro import configs
-from repro.configs.common import SHAPES
 from repro.utils import analytic
-from repro.utils.hlo import PEAK_FLOPS
 from benchmarks.common import emit
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..",

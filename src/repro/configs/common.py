@@ -7,7 +7,6 @@ versions of the same family on CPU.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 from repro.models.config import LayerSpec, ModelConfig, MoESpec, SSMSpec
 

@@ -6,6 +6,8 @@ from repro.core.maps import (is_fractal, lambda_map, lambda_map_matmul,
                              nu_map, nu_map_matmul, nu_with_membership)
 from repro.core.compact import (BlockLayout, MOORE_DIRS, compact_to_expanded,
                                 expanded_to_compact)
+from repro.core.compact3d import BlockLayout3D
+from repro.core.fractals3d import MENGER, SIERPINSKI3D, NBBFractal3D
 from repro.core.stencil import (SqueezeBlockEngine, SqueezeCellEngine,
                                 SqueezePallasEngine, make_engine)
 from repro.core.baselines import BBEngine, LambdaEngine, life_rule
@@ -15,6 +17,7 @@ __all__ = [
     "VICSEK", "NBBFractal", "get_fractal", "is_fractal", "lambda_map",
     "lambda_map_matmul", "nu_map", "nu_map_matmul", "nu_with_membership",
     "BlockLayout", "MOORE_DIRS", "compact_to_expanded", "expanded_to_compact",
+    "BlockLayout3D", "MENGER", "SIERPINSKI3D", "NBBFractal3D",
     "SqueezeBlockEngine", "SqueezeCellEngine", "SqueezePallasEngine",
     "make_engine", "BBEngine", "LambdaEngine", "life_rule",
 ]

@@ -64,7 +64,7 @@ def compact_to_expanded(frac: NBBFractal, r: int, state_c: Array) -> Array:
 
 
 def expanded_to_compact(frac: NBBFractal, r: int, state_e: Array) -> Array:
-    """Gather an expanded state into compact form (reads only fractal cells)."""
+    """Gather an expanded state into compact form (fractal cells only)."""
     cx, cy = compact_meshgrid(frac, r)
     ex, ey = maps.lambda_map(frac, r, cx, cy)
     return state_e[..., ey, ex]

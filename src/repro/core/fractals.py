@@ -65,7 +65,8 @@ class NBBFractal:
         """r = log_s(n); n must be an exact power of s."""
         r = int(round(np.log(n) / np.log(self.s)))
         if self.s ** r != n:
-            raise ValueError(f"{self.name}: n={n} is not a power of s={self.s}")
+            raise ValueError(
+                f"{self.name}: n={n} is not a power of s={self.s}")
         return r
 
     def compact_dims(self, r: int) -> Tuple[int, int]:
@@ -112,7 +113,7 @@ class NBBFractal:
         return m
 
 
-# --------------------------------------------------------------------- registry
+# -------------------------------------------------------------- registry
 def _rowmajor_except(s: int, holes: Tuple[Coord, ...]) -> Tuple[Coord, ...]:
     hole_set = set(holes)
     return tuple((x, y) for y in range(s) for x in range(s)

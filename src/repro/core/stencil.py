@@ -360,15 +360,17 @@ _DIST_KINDS = {"dist-block": "jnp", "dist-fused": "fused",
                "dist-mxu": "mxu"}
 
 
-def make_engine(kind: str, frac: NBBFractal, r: int, m: int = 0,
+def make_engine(kind: str, frac, r: int, m: int = 0,
                 workload: StencilWorkload = LIFE,
                 fusion_k: Optional[int] = None, mesh=None, axis: str = "data"):
     """Engine factory.
 
     kind: 'bb' | 'lambda' | 'cell' | 'block' | 'pallas-blocks' |
           'pallas-strips' | 'pallas-fused' | 'pallas-mxu' |
-          'dist-block' | 'dist-fused' | 'dist-mxu'
-          ('pallas' = 'pallas-strips').
+          'dist-block' | 'dist-fused' | 'dist-mxu' |
+          'bb3d' | 'cell3d' | 'block3d' | 'pallas-3d' | 'pallas-3d-mxu'
+          ('pallas' = 'pallas-strips', 'pallas-3d' = the fused 3D
+          kernel).
     ``m`` (block level, rho = s**m) and ``fusion_k`` (temporal-fusion
     depth for ``run``; None = heuristic) only apply to the block/pallas/
     dist kinds — the expanded-space and cell engines have no block tiles
@@ -384,8 +386,29 @@ def make_engine(kind: str, frac: NBBFractal, r: int, m: int = 0,
     named shard-local compute backend — 'dist-block' is the XLA window
     path, 'dist-fused' the v4 fused-depth kernel, 'dist-mxu' the v5 MXU
     macro-tile kernel. See DESIGN.md Section 4.
+
+    The '*3d' kinds take an ``NBBFractal3D`` and a 3D single-channel
+    workload (LIFE3D, HEAT3D): 'bb3d'/'cell3d' are the expanded and
+    per-cell compact engines, 'block3d' the 3D block engine over
+    ``BlockLayout3D`` (XLA path, any fusion depth), 'pallas-3d' the
+    fused depth-k 3D kernel and 'pallas-3d-mxu' the z-slab MXU
+    stencil-as-matmul kernel (both k <= rho). See DESIGN.md Section 5.
     """
     from repro.core.baselines import LambdaEngine
+    if kind in ("bb3d", "cell3d", "block3d") or kind.startswith("pallas-3d"):
+        from repro.core import stencil3d as s3
+        from repro.core.compact3d import BlockLayout3D
+        if kind == "bb3d":
+            return s3.BB3DEngine(frac, r, workload)
+        if kind == "cell3d":
+            return s3.Squeeze3DEngine(frac, r, workload)
+        if kind == "block3d":
+            return s3.Squeeze3DBlockEngine(BlockLayout3D(frac, r, m),
+                                           workload, fusion_k=fusion_k)
+        variant = kind[len("pallas-3d"):].lstrip("-") or "fused"
+        return s3.Squeeze3DPallasEngine(BlockLayout3D(frac, r, m),
+                                        workload, variant=variant,
+                                        fusion_k=fusion_k)
     if kind == "bb":
         return BBEngine(frac, r, workload)
     if kind == "lambda":

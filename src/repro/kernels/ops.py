@@ -86,6 +86,30 @@ def stencil_step_mxu_batched(layout: BlockLayout, states, workload=LIFE, *,
                                              interpret=interpret)
 
 
+def stencil3d_step_fused_k(layout, state, workload=None, *, k: int = 2,
+                           interpret: Optional[bool] = None):
+    """Fused 3D block-level workload step (v4-style temporal fusion):
+    k exact steps per launch on a depth-k (rho+2k)^3 window in VMEM.
+    ``layout`` is a ``compact3d.BlockLayout3D``; k <= rho."""
+    from repro.kernels import squeeze_stencil3d as _s3
+    from repro.workloads.rules import LIFE3D
+    return _s3.stencil3d_step_fused_k(
+        layout, state, LIFE3D if workload is None else workload, k=k,
+        interpret=interpret)
+
+
+def stencil3d_step_mxu_k(layout, state, workload=None, *, k: int = 1,
+                         interpret: Optional[bool] = None):
+    """Fused 3D block-level workload step (v5-style MXU): the 26-cell
+    aggregation as banded matmuls per z-slab on lane-packed macro-tiles.
+    ``layout`` is a ``compact3d.BlockLayout3D``; k <= rho."""
+    from repro.kernels import squeeze_stencil3d as _s3
+    from repro.workloads.rules import LIFE3D
+    return _s3.stencil3d_step_mxu_k(
+        layout, state, LIFE3D if workload is None else workload, k=k,
+        interpret=interpret)
+
+
 def life_step_blocks(layout: BlockLayout, state, *,
                      interpret: Optional[bool] = None):
     """Fused block-level GoL step, v1 (neighbor-block staging)."""
@@ -129,4 +153,5 @@ __all__ = ["nu_map_tc", "lambda_map_tc", "life_step_blocks",
            "stencil_step_strips", "stencil_step_fused",
            "stencil_step_fused_k", "stencil_step_mxu",
            "stencil_step_mxu_k", "stencil_step_mxu_batched",
+           "stencil3d_step_fused_k", "stencil3d_step_mxu_k",
            "flash_attention", "ssd_chunk_scan", "default_interpret"]

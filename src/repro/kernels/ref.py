@@ -69,7 +69,8 @@ def attention_ref(q: Array, k: Array, v: Array, *,
                    k.astype(jnp.float32)) * scale
     if softcap is not None:
         s = softcap * jnp.tanh(s / softcap)
-    qpos = jnp.arange(sq)[:, None] + (sk - sq)  # right-aligned (decode-friendly)
+    # right-aligned positions (decode-friendly)
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)
     kpos = jnp.arange(sk)[None, :]
     mask = jnp.ones((sq, sk), bool)
     if causal:

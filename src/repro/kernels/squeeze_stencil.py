@@ -606,11 +606,11 @@ def _mxu_kernel(workload, k, p, n_terms, ex_ref, c_ref, top_ref, bot_ref,
 def _pack_macro(arr: jnp.ndarray, nb: int, p: int, n_macro: int):
     """(L, nb, h, c) per-block strips -> (L, n_macro, h, P*c) lane-packed
     macro strips (zero-filled padding slots past nb)."""
-    l, _, h, cols = arr.shape
-    pad = jnp.zeros((l, n_macro * p - nb, h, cols), arr.dtype)
+    lead, _, h, cols = arr.shape
+    pad = jnp.zeros((lead, n_macro * p - nb, h, cols), arr.dtype)
     a = jnp.concatenate([arr, pad], axis=1)
-    a = a.reshape(l, n_macro, p, h, cols).transpose(0, 1, 3, 2, 4)
-    return a.reshape(l, n_macro, h, p * cols)
+    a = a.reshape(lead, n_macro, p, h, cols).transpose(0, 1, 3, 2, 4)
+    return a.reshape(lead, n_macro, h, p * cols)
 
 
 def stencil_step_mxu_batched(layout: BlockLayout, states: jnp.ndarray,
@@ -822,6 +822,15 @@ def stencil_step_mxu_k_local(layout: BlockLayout, states: jnp.ndarray,
       layout.dev_window_mask(k), jnp.asarray(rm), jnp.asarray(ct))
     out = out.reshape(b, nc, n_macro, rho, p, rho).transpose(0, 1, 2, 4, 3, 5)
     return out.reshape(b, nc, n_macro * p, rho, rho)[:, :, :nbl]
+
+
+# ======================================================================
+# 3D kernel family — defined in kernels/squeeze_stencil3d.py (the same
+# v4/v5 designs over BlockLayout3D), re-exported here so the stencil
+# kernel surface stays importable from one module.
+# ======================================================================
+from repro.kernels.squeeze_stencil3d import (  # noqa: E402,F401
+    stencil3d_step_fused_k, stencil3d_step_mxu_k)
 
 
 # ======================================================================

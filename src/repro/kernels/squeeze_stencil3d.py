@@ -1,0 +1,365 @@
+"""Fused 3D block-level Squeeze stencil kernels — the v4/v5 kernel
+family of kernels/squeeze_stencil.py lifted to 3D NBB fractals.
+
+Both entry points are driven by the static block tables of
+``compact3d.BlockLayout3D`` (built from the lambda3/nu3 maps) and
+parameterized by a single-channel ``StencilWorkload`` over the 26-cell
+3D Moore neighborhood:
+
+  * ``stencil3d_step_fused_k`` (v4-style temporal fusion): the depth-k
+    halo — six face slabs covering the full window frame — is gathered
+    once by XLA over the static neighbor table, then the kernel runs k
+    update substeps on a (rho+2k)^3 window held in VMEM before the
+    single center write-back. Per-window occupancy is rebuilt in-kernel
+    from the shared periodic ``window_mask`` gated by a
+    scalar-prefetched 26-direction block-existence table (the 2D
+    substep mask discipline, per region).
+
+  * ``stencil3d_step_mxu_k`` (v5-style MXU stencil-as-matmul): the
+    26-neighbor aggregation runs as banded matmul contractions *per
+    z-slab*: each z-plane of the (3,3,3) weight tensor factors into
+    <= 2 rank-1 terms (``workload.weight_factors3``), so slab z's
+    aggregate is ``sum_dz sum_t R_t(dz) @ X[z+dz] @ C_t(dz)^T`` — MXU
+    contractions on (rho+2k, P*(rho+2k)) slab matrices with P blocks
+    lane-packed along x (``BlockLayout3D.macro_tiles``), instead of 26
+    VPU shift-adds. Slot borders and the z-shifted window edges
+    accumulate truncated-band garbage ring by ring; the center sits at
+    distance >= k from every border, so the final extraction is exact
+    (the same shrinking-window argument as the 2D v5 kernel).
+
+State is (n_blocks, rho, rho, rho) indexed [b, z, y, x] (single-channel
+workloads only, as the 3D engines). ``interpret=None`` auto-detects:
+compiled Mosaic on TPU, the Pallas interpreter elsewhere.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.compact3d import BlockLayout3D, halo_regions3
+from repro.kernels.common import resolve_interpret
+from repro.workloads.base import (MOORE3_DIRS, StencilWorkload,
+                                  banded_operators)
+from repro.workloads.rules import LIFE3D
+
+#: direction -> MOORE3_DIRS index (the gather/table column order)
+DIR3_INDEX = {d: i for i, d in enumerate(MOORE3_DIRS)}
+
+
+def _gather_halo3_k(layout: BlockLayout3D, s: jnp.ndarray, k: int):
+    """Depth-k halo slabs via slab-level XLA gathers over the static
+    26-direction neighbor table (k <= rho, so every piece comes from one
+    Moore neighbor). Returns six pieces whose union is the full window
+    frame:
+
+      zlo/zhi (C, nb, k, w, w)     — full-xy-extent z faces, including
+                                     all 12 edge and 8 corner pieces at
+                                     that z (w = rho + 2k);
+      ylo/yhi (C, nb, rho, k, w)   — center-z y faces incl. x edges;
+      xlo/xhi (C, nb, rho, rho, k) — center x faces.
+
+    Ghost ids index an appended zero slab. No zero-weight skipping: a
+    k >= 2 substep chain propagates diagonal values inward even under
+    orthogonal-only weights (the radius-k L1 dependency cone).
+    """
+    rho = layout.rho
+    nc = s.shape[0]
+    table = layout.dev_neighbor_table
+
+    def take(strip, d):  # strip (C, nb, ...), pre-sliced before the gather
+        z = jnp.zeros((nc, 1) + strip.shape[2:], s.dtype)
+        return jnp.concatenate([strip, z], 1)[:, table[:, DIR3_INDEX[d]]]
+
+    x_src = {-1: slice(rho - k, rho), 0: slice(None), 1: slice(0, k)}
+
+    def zface(dz):  # (C, nb, k, w, w): 9 pieces across (dy, dx)
+        rows = []
+        for dy in (-1, 0, 1):
+            rows.append(jnp.concatenate(
+                [take(s[:, :, x_src[dz], x_src[dy], x_src[dx]],
+                      (dx, dy, dz)) for dx in (-1, 0, 1)], axis=-1))
+        return jnp.concatenate(rows, axis=-2)
+
+    def yface(dy):  # (C, nb, rho, k, w): 3 pieces across dx at dz = 0
+        return jnp.concatenate(
+            [take(s[:, :, :, x_src[dy], x_src[dx]], (dx, dy, 0))
+             for dx in (-1, 0, 1)], axis=-1)
+
+    return (zface(-1), zface(1), yface(-1), yface(1),
+            take(s[:, :, :, :, rho - k:], (-1, 0, 0)),
+            take(s[:, :, :, :, :k], (1, 0, 0)))
+
+
+def _assemble_window(c, zlo, zhi, ylo, yhi, xlo, xhi, k):
+    """(C, rho^3) center + six face slabs -> (C, w^3) window."""
+    rho = c.shape[-1]
+    w = rho + 2 * k
+    padded = jnp.zeros(c.shape[:-3] + (w, w, w), c.dtype)
+    padded = padded.at[..., k:k + rho, k:k + rho, k:k + rho].set(c)
+    padded = padded.at[..., :k, :, :].set(zlo)
+    padded = padded.at[..., w - k:, :, :].set(zhi)
+    padded = padded.at[..., k:k + rho, :k, :].set(ylo)
+    padded = padded.at[..., k:k + rho, w - k:, :].set(yhi)
+    padded = padded.at[..., k:k + rho, k:k + rho, :k].set(xlo)
+    padded = padded.at[..., k:k + rho, k:k + rho, w - k:].set(xhi)
+    return padded
+
+
+# ======================================================================
+# v4-style: depth-k window assembled in VMEM, k substeps, one write
+# ======================================================================
+def _fused3_k_kernel(workload, k, ex_ref, c_ref, zlo_ref, zhi_ref, ylo_ref,
+                     yhi_ref, xlo_ref, xhi_ref, wmask_ref, out_ref):
+    """One grid step = one block: assemble the (C, w, w, w) window,
+    rebuild its occupancy (periodic window mask x prefetched block
+    existence per region), then run the workload's k fused substeps."""
+    rho = c_ref.shape[-1]
+    padded = _assemble_window(
+        c_ref[:, 0], zlo_ref[:, 0], zhi_ref[:, 0], ylo_ref[:, 0],
+        yhi_ref[:, 0], xlo_ref[:, 0], xhi_ref[:, 0], k)
+
+    i = pl.program_id(0)
+    mask = wmask_ref[...].astype(jnp.int32)
+    for d, (zs, ys, xs) in enumerate(halo_regions3(rho, k)):
+        mask = mask.at[zs, ys, xs].set(mask[zs, ys, xs] * ex_ref[i, d])
+
+    nxt = workload.tile_rule_k(padded[0], mask, k, ndim=3)[None]
+    out_ref[:, 0] = nxt.astype(out_ref.dtype)
+
+
+def stencil3d_step_fused_k(layout: BlockLayout3D, state: jnp.ndarray,
+                           workload: StencilWorkload = LIFE3D, *,
+                           k: int = 2,
+                           interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Advance ``k`` exact 3D steps in ONE kernel launch (k <= rho).
+
+    state (n_blocks, rho, rho, rho) -> same, k steps later. The depth-k
+    halo is gathered once; the kernel runs k substeps on a (rho+2k)^3
+    window in VMEM and writes the center back once.
+    """
+    if k < 1:
+        raise ValueError(f"need k >= 1, got k={k}")
+    if k > layout.rho:
+        raise ValueError(
+            f"fused 3D kernel needs k <= rho, got k={k} > rho={layout.rho} "
+            "(use Squeeze3DBlockEngine.step_k for deeper halos)")
+    layout.materialize()
+    _ = layout.dev_existence_table, layout.dev_window_mask(k)
+    return _stencil3d_step_fused_k(layout, state, workload, k,
+                                   interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("layout", "workload", "k", "interpret"))
+def _stencil3d_step_fused_k(layout: BlockLayout3D, state: jnp.ndarray,
+                            workload: StencilWorkload, k: int, *,
+                            interpret: bool) -> jnp.ndarray:
+    rho, nb = layout.rho, layout.n_blocks
+    s = state[None]  # single-channel: explicit channel axis internally
+    w = rho + 2 * k
+    zlo, zhi, ylo, yhi, xlo, xhi = _gather_halo3_k(layout, s, k)
+    blk = lambda *shape: pl.BlockSpec(shape, lambda i, ex: (0, i) + (0,) * (len(shape) - 2))  # noqa: E731,E501
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[
+            blk(1, 1, rho, rho, rho),
+            blk(1, 1, k, w, w), blk(1, 1, k, w, w),      # z faces
+            blk(1, 1, rho, k, w), blk(1, 1, rho, k, w),  # y faces
+            blk(1, 1, rho, rho, k), blk(1, 1, rho, rho, k),  # x faces
+            pl.BlockSpec((w, w, w), lambda i, ex: (0, 0, 0)),
+        ],
+        out_specs=blk(1, 1, rho, rho, rho),
+    )
+    out = pl.pallas_call(
+        functools.partial(_fused3_k_kernel, workload, k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, nb, rho, rho, rho),
+                                       workload.dtype),
+        interpret=interpret,
+    )(layout.dev_existence_table, s, zlo, zhi, ylo, yhi, xlo, xhi,
+      layout.dev_window_mask(k))
+    return out[0]
+
+
+# ======================================================================
+# v5-style: z-slab banded MXU contractions on lane-packed macro-tiles
+# ======================================================================
+@functools.lru_cache(maxsize=128)
+def _mxu3_operators(workload: StencilWorkload, w: int, p: int):
+    """Static MXU contraction operands for one (workload, window, pack):
+    per rank-1 term of each nonzero z-plane of the weight tensor, a
+    banded ``R`` (w, w) row contraction and the block-diagonal (per
+    lane-packed slot) transpose ``CT`` (p*w, p*w) of its banded column
+    contraction, plus the static tuple of per-term z shifts — slab z's
+    aggregate is ``sum_t R_t @ X[z + dz_t] @ CT_t``."""
+    rms, cts, dzs = [], [], []
+    for dz in (-1, 0, 1):
+        terms = workload.weight_factors3[dz + 1]
+        if not terms:
+            continue
+        rm, cm = banded_operators(terms, w, np.float32)
+        for t in range(rm.shape[0]):
+            ct = np.zeros((p * w, p * w), np.float32)
+            for sl in range(p):
+                ct[sl * w:(sl + 1) * w, sl * w:(sl + 1) * w] = cm[t].T
+            rms.append(rm[t])
+            cts.append(ct)
+            dzs.append(dz)
+    return np.stack(rms), np.stack(cts), tuple(dzs)
+
+
+def _zshift(x: jnp.ndarray, dz: int) -> jnp.ndarray:
+    """out[z] = x[z + dz] over the trailing-3 z axis, zero-padded at the
+    window border (border slabs are garbage-by-design: they sit outside
+    the shrinking live window of the fused substeps)."""
+    if dz == 0:
+        return x
+    nz = x.shape[-3]
+    pad = jnp.zeros(x.shape[:-3] + (1,) + x.shape[-2:], x.dtype)
+    if dz > 0:
+        return jnp.concatenate([x[..., 1:, :, :], pad], axis=-3)
+    return jnp.concatenate([pad, x[..., :nz - 1, :, :]], axis=-3)
+
+
+def _mxu3_kernel(workload, k, p, dzs, ex_ref, c_ref, zlo_ref, zhi_ref,
+                 ylo_ref, yhi_ref, xlo_ref, xhi_ref, wmask_ref, r_ref,
+                 ct_ref, out_ref):
+    """One grid step = one macro-tile: assemble the (w, w, P*w)
+    lane-packed window (P block slots side by side along x), rebuild
+    each slot's occupancy from the shared periodic window mask gated by
+    its prefetched 26-direction existence row, then run k substeps whose
+    26-neighbor aggregation is the per-z-slab banded matmul sum."""
+    rho = c_ref.shape[-2]
+    w = rho + 2 * k
+    c = c_ref[0, 0]                          # (rho, rho, P*rho)
+    zlo, zhi = zlo_ref[0, 0], zhi_ref[0, 0]  # (k, w, P*w)
+    ylo, yhi = ylo_ref[0, 0], yhi_ref[0, 0]  # (rho, k, P*w)
+    xlo, xhi = xlo_ref[0, 0], xhi_ref[0, 0]  # (rho, rho, P*k)
+    i = pl.program_id(0)
+
+    cur = jnp.zeros((w, w, p * w), c.dtype)
+    mask = jnp.zeros((w, w, p * w), jnp.int32)
+    wm = wmask_ref[...].astype(jnp.int32)
+    for sl in range(p):
+        b0 = sl * w
+        win = _assemble_window(
+            c[:, :, sl * rho:(sl + 1) * rho],
+            zlo[:, :, sl * w:(sl + 1) * w], zhi[:, :, sl * w:(sl + 1) * w],
+            ylo[:, :, sl * w:(sl + 1) * w], yhi[:, :, sl * w:(sl + 1) * w],
+            xlo[:, :, sl * k:(sl + 1) * k], xhi[:, :, sl * k:(sl + 1) * k],
+            k)
+        cur = cur.at[:, :, b0:b0 + w].set(win)
+        m = wm
+        for d, (zs, ys, xs) in enumerate(halo_regions3(rho, k)):
+            m = m.at[zs, ys, xs].set(m[zs, ys, xs] * ex_ref[i * p + sl, d])
+        mask = mask.at[:, :, b0:b0 + w].set(m)
+
+    rm = r_ref[...]                          # (T, w, w) f32
+    ct = ct_ref[...]                         # (T, P*w, P*w) f32
+    int_agg = jnp.issubdtype(jnp.dtype(workload.agg_dtype), jnp.integer)
+    for _ in range(k):
+        x = cur.astype(jnp.float32)
+        agg = jnp.zeros((w, w, p * w), jnp.float32)
+        for t, dz in enumerate(dzs):
+            xs = _zshift(x, dz)              # (w_z, w_y, P*w_x) slabs
+            y = jnp.einsum("ij,zjx->zix", rm[t], xs)
+            agg = agg + jnp.einsum("zix,xm->zim", y, ct[t])
+        # integer CA aggregates: the f32 matmuls reconstruct integer
+        # neighbor counts to ~1e-5, so nearest-int rounding is bit-exact
+        agg = (jnp.rint(agg).astype(workload.agg_dtype) if int_agg
+               else agg.astype(workload.agg_dtype))
+        cur = workload.apply(cur, agg, mask).astype(c.dtype)
+
+    out = jnp.zeros((rho, rho, p * rho), out_ref.dtype)
+    for sl in range(p):
+        out = out.at[:, :, sl * rho:(sl + 1) * rho].set(
+            cur[k:k + rho, k:k + rho,
+                sl * w + k:sl * w + k + rho].astype(out.dtype))
+    out_ref[0, 0] = out
+
+
+def _pack_macro3(arr: jnp.ndarray, nb: int, p: int, n_macro: int):
+    """(L, nb, d, h, c) per-block slabs -> (L, n_macro, d, h, P*c)
+    lane-packed macro slabs (zero-filled padding slots past nb)."""
+    lead, _, d, h, cols = arr.shape
+    pad = jnp.zeros((lead, n_macro * p - nb, d, h, cols), arr.dtype)
+    a = jnp.concatenate([arr, pad], axis=1)
+    a = a.reshape(lead, n_macro, p, d, h, cols).transpose(0, 1, 3, 4, 2, 5)
+    return a.reshape(lead, n_macro, d, h, p * cols)
+
+
+def stencil3d_step_mxu_k(layout: BlockLayout3D, state: jnp.ndarray,
+                         workload: StencilWorkload = LIFE3D, *, k: int = 1,
+                         interpret: Optional[bool] = None) -> jnp.ndarray:
+    """v5-style 3D MXU step: ``k`` exact steps in one macro-tile launch
+    whose 26-neighbor aggregation runs as banded matmuls per z-slab
+    (k <= rho). state (n_blocks, rho, rho, rho) -> same."""
+    if k < 1:
+        raise ValueError(f"need k >= 1, got k={k}")
+    if k > layout.rho:
+        raise ValueError(
+            f"mxu 3D kernel needs k <= rho, got k={k} > rho={layout.rho} "
+            "(use Squeeze3DBlockEngine.step_k for deeper halos)")
+    layout.materialize()
+    _ = layout.dev_existence_padded(k), layout.dev_window_mask(k)
+    _ = _mxu3_operators(workload, layout.rho + 2 * k,
+                        layout.macro_tiles(k)[0])
+    return _stencil3d_step_mxu_k(layout, state, workload, k,
+                                 interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("layout", "workload", "k", "interpret"))
+def _stencil3d_step_mxu_k(layout: BlockLayout3D, state: jnp.ndarray,
+                          workload: StencilWorkload, k: int, *,
+                          interpret: bool) -> jnp.ndarray:
+    rho, nb = layout.rho, layout.n_blocks
+    w = rho + 2 * k
+    p, n_macro, _ = layout.macro_tiles(k)
+    s = state[None]
+    pieces = _gather_halo3_k(layout, s, k)
+
+    def pack(arr):
+        return _pack_macro3(arr, nb, p, n_macro)
+
+    cm = pack(s)
+    zlom, zhim, ylom, yhim, xlom, xhim = (pack(a) for a in pieces)
+    rm, ct, dzs = _mxu3_operators(workload, w, p)
+    n_terms = rm.shape[0]
+
+    def blk(d, h, cols):
+        return pl.BlockSpec((1, 1, d, h, cols),
+                            lambda i, ex: (0, i, 0, 0, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_macro,),
+        in_specs=[
+            blk(rho, rho, p * rho),
+            blk(k, w, p * w), blk(k, w, p * w),          # z faces
+            blk(rho, k, p * w), blk(rho, k, p * w),      # y faces
+            blk(rho, rho, p * k), blk(rho, rho, p * k),  # x faces
+            pl.BlockSpec((w, w, w), lambda i, ex: (0, 0, 0)),
+            pl.BlockSpec((n_terms, w, w), lambda i, ex: (0, 0, 0)),
+            pl.BlockSpec((n_terms, p * w, p * w),
+                         lambda i, ex: (0, 0, 0)),
+        ],
+        out_specs=blk(rho, rho, p * rho),
+    )
+    out = pl.pallas_call(
+        functools.partial(_mxu3_kernel, workload, k, p, dzs),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, n_macro, rho, rho, p * rho),
+                                       workload.dtype),
+        interpret=interpret,
+    )(layout.dev_existence_padded(k), cm, zlom, zhim, ylom, yhim, xlom,
+      xhim, layout.dev_window_mask(k), jnp.asarray(rm), jnp.asarray(ct))
+    out = out.reshape(n_macro, rho, rho, p, rho).transpose(0, 3, 1, 2, 4)
+    return out.reshape(n_macro * p, rho, rho, rho)[:nb]

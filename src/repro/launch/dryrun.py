@@ -12,7 +12,9 @@ x mesh) cell against the production mesh with 512 placeholder host
 devices; print memory_analysis() (proves it fits) and cost_analysis()
 (FLOPs/bytes for the roofline), plus the parsed collective schedule.
 
-Run one cell:   python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k [--multi-pod]
+Run one cell:
+    python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+                                  [--multi-pod]
 Run the matrix: python -m repro.launch.dryrun --all --out results.jsonl
 (The matrix driver execs one fresh process per cell so compile arenas are
 reclaimed between 100B-scale lowers.)
@@ -44,7 +46,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    print(f"== {arch} x {shape} on {'multi-pod 2x16x16' if multi_pod else 'single-pod 16x16'} ({n_chips} chips)")
+    pod = 'multi-pod 2x16x16' if multi_pod else 'single-pod 16x16'
+    print(f"== {arch} x {shape} on {pod} ({n_chips} chips)")
     print(mem)
     ca = compiled.cost_analysis() or {}
     print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})

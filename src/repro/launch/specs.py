@@ -229,20 +229,20 @@ def opt_state_shardings(opt_state_specs, params_specs, mesh: Mesh):
 
     def build(sub):
         if isinstance(sub, dict) and set(sub) == {"q", "scale"}:
-            q_sh = jax.tree.map(lambda l, s: s, sub["q"], p_sh)
+            q_sh = jax.tree.map(lambda _l, s: s, sub["q"], p_sh)
             s_sh = jax.tree.map(
-                lambda l, s: NamedSharding(
+                lambda _l, s: NamedSharding(
                     mesh, P(*(list(s.spec[:-1]) + [None]))
                     if len(s.spec) else P()),
                 sub["scale"], p_sh)
             return {"q": q_sh, "scale": s_sh}
-        return jax.tree.map(lambda l, s: s, sub, p_sh)
+        return jax.tree.map(lambda _l, s: s, sub, p_sh)
 
     out = {"step": NamedSharding(mesh, P())}
     for k in ("m", "v"):
         out[k] = build(opt_state_specs[k])
     if "ef" in opt_state_specs:
-        out["ef"] = jax.tree.map(lambda l, s: s, opt_state_specs["ef"], p_sh)
+        out["ef"] = jax.tree.map(lambda _l, s: s, opt_state_specs["ef"], p_sh)
     return out
 
 

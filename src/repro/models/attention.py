@@ -173,10 +173,10 @@ def _sdpa_chunked(q: Array, k: Array, v: Array, cfg: ModelConfig, *,
         # remat the kv step: the (BQ, BK) probability tile is recomputed
         # in backward instead of being stashed per step (bounds the scan
         # residuals at carry size — the flash trick, XLA edition)
-        (m, l, acc), _ = jax.lax.scan(
+        (m, lsum, acc), _ = jax.lax.scan(
             jax.checkpoint(kv_step), init,
             (jnp.arange(nk, dtype=jnp.int32), kb, vb))
-        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        out = acc / jnp.maximum(lsum, 1e-30)[..., None]
         return out  # (B, KVH, G, BQ, hd)
 
     outs = jax.lax.map(lambda args: jax.checkpoint(q_block)(*args),

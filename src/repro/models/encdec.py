@@ -5,7 +5,7 @@ encoder stack, causal decoder with cross-attention, KV caches) is real.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

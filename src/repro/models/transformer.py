@@ -23,7 +23,7 @@ from repro.models.config import LayerSpec, ModelConfig
 from repro.models.layers import (apply_mlp, apply_norm, embed_tokens,
                                  init_embed, init_mlp, init_norm,
                                  trunc_normal, unembed)
-from repro.utils.sharding import batch_spec, constraint
+from repro.utils.sharding import constraint
 
 Array = jnp.ndarray
 

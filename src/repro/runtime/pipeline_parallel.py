@@ -79,7 +79,7 @@ def pipeline_apply(stage_fn: Callable, stage_params, x: Array, *,
 def stack_stages(layer_params_stacked, n_stages: int):
     """Reshape (L, ...) stacked layer params into (P, L/P, ...) stages."""
     def r(a):
-        l = a.shape[0]
-        assert l % n_stages == 0, (l, n_stages)
-        return a.reshape(n_stages, l // n_stages, *a.shape[1:])
+        nl = a.shape[0]
+        assert nl % n_stages == 0, (nl, n_stages)
+        return a.reshape(n_stages, nl // n_stages, *a.shape[1:])
     return jax.tree.map(r, layer_params_stacked)

@@ -29,7 +29,8 @@ _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
 # e.g.   %x = f32[64,512]{1,0} all-reduce(...)
 #        %y = (f32[8,4]{...}, f32[8,4]{...}) all-gather(...)
 _OP_LINE = re.compile(
-    r"=\s*(\(?[^=]*?)\s*(" + "|".join(_COLLECTIVES) + r")(?:-(?:start|done))?\(")
+    r"=\s*(\(?[^=]*?)\s*(" + "|".join(_COLLECTIVES)
+    + r")(?:-(?:start|done))?\(")
 _SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
 
 

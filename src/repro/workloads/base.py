@@ -47,6 +47,14 @@ MOORE_DIRS: Tuple[Tuple[int, int], ...] = (
     (-1, 1), (0, 1), (1, 1),
 )
 
+#: 3D Moore neighborhood (dx, dy, dz), raster-ordered (dz slowest, dx
+#: fastest) so the 26 directions line up with the 3D halo regions the
+#: same way MOORE_DIRS lines up with the 2D ones.
+MOORE3_DIRS: Tuple[Tuple[int, int, int], ...] = tuple(
+    (dx, dy, dz)
+    for dz in (-1, 0, 1) for dy in (-1, 0, 1) for dx in (-1, 0, 1)
+    if (dx, dy, dz) != (0, 0, 0))
+
 
 class StencilWorkload:
     """Base class; concrete workloads are frozen dataclasses (hashable, so
@@ -95,6 +103,34 @@ class StencilWorkload:
             w[dy + 1, dx + 1] = self.weight((dx, dy))
         return w
 
+    @property
+    def weights3d(self):
+        """Weights over the 26 3D Moore directions, MOORE3_DIRS order."""
+        return tuple(self.weight(d) for d in MOORE3_DIRS)
+
+    @property
+    def weights3x3x3(self) -> np.ndarray:
+        """The 3D neighbor weights as a (3, 3, 3) float64 tensor indexed
+        ``[dz+1, dy+1, dx+1]`` (center weight 0, as in ``weights3x3``)."""
+        w = np.zeros((3, 3, 3), np.float64)
+        for dx, dy, dz in MOORE3_DIRS:
+            w[dz + 1, dy + 1, dx + 1] = self.weight((dx, dy, dz))
+        return w
+
+    @functools.cached_property
+    def weight_factors3(self) -> Tuple[Tuple, Tuple, Tuple]:
+        """Per-z-plane rank-1 decompositions of ``weights3x3x3``: a
+        3-tuple (dz = -1, 0, +1), each entry the ``svd_rank1_terms`` of
+        that plane's 3x3 xy weight matrix (empty for all-zero planes).
+        This is the z-slab MXU formulation: the 26-neighbor aggregate of
+        slab ``z`` is ``sum_dz sum_t R_t(dz) @ X[z+dz] @ C_t(dz)^T`` —
+        each z-plane of the weight tensor is an independent 2D banded
+        contraction applied to the neighboring slab (see DESIGN.md
+        Section 5). Exactness is verified per plane at build time."""
+        return tuple(
+            svd_rank1_terms(plane) if plane.any() else ()
+            for plane in self.weights3x3x3)
+
     @functools.cached_property
     def weight_factors(self) -> Tuple[Tuple[Tuple[float, ...],
                                             Tuple[float, ...]], ...]:
@@ -115,7 +151,8 @@ class StencilWorkload:
         agg = weighted_moore_agg(padded, self.weights2d, self.agg_dtype)
         return self.apply(center, agg, mask)
 
-    def tile_rule_k(self, padded: Array, halo_mask, k: int) -> Array:
+    def tile_rule_k(self, padded: Array, halo_mask, k: int,
+                    ndim: int = 2) -> Array:
         """``k`` fused updates on a depth-``k`` padded tile (temporal
         blocking). ``padded`` is (C?, h+2k, w+2k); each substep updates the
         current window's interior and the window shrinks by one ring, so
@@ -124,13 +161,19 @@ class StencilWorkload:
         (trailing (h+2k, w+2k) axes; leading axes broadcast) or None; it is
         re-applied at every substep on a matching shrinking crop — halo
         cells belong to neighbor tiles whose holes/ghosts must stay zero
-        mid-flight, not just at the final write."""
+        mid-flight, not just at the final write.
+
+        ``ndim=3`` runs the same discipline on a (C?, d+2k, h+2k, w+2k)
+        volume over the 26-direction aggregate (the 3D block engines)."""
+        crop = (Ellipsis,) + (slice(1, -1),) * ndim
+        agg_of = weighted_moore_agg if ndim == 2 else weighted_moore_agg3
+        weights = self.weights2d if ndim == 2 else self.weights3d
         cur = padded
         for _ in range(k):
-            center = cur[..., 1:-1, 1:-1]
-            agg = weighted_moore_agg(cur, self.weights2d, self.agg_dtype)
+            center = cur[crop]
+            agg = agg_of(cur, weights, self.agg_dtype)
             if halo_mask is not None:
-                halo_mask = halo_mask[..., 1:-1, 1:-1]
+                halo_mask = halo_mask[crop]
             cur = self.apply(center, agg, halo_mask)
         return cur
 
@@ -300,4 +343,43 @@ def weighted_moore_agg(padded: Array, weights, agg_dtype) -> Array:
         sl = padded[..., 1 + dy:h + 1 + dy, 1 + dx:w + 1 + dx]
         sl = sl.astype(agg_dtype)
         agg = agg + _scaled(sl, wt, agg_dtype)
+    return agg
+
+
+def weighted_moore_agg3(padded: Array, weights, agg_dtype) -> Array:
+    """Weighted 26-neighbor aggregate from a (+1)-padded 3D array.
+
+    ``padded`` is (..., D+2, H+2, W+2); returns (..., D, H, W) — the 3D
+    counterpart of ``weighted_moore_agg``, slicing the trailing three axes
+    so leading channel/block axes broadcast through.
+
+    A uniform 26-weight set (LIFE3D) takes the separable fast path: the
+    27-cell box sum is built from three axis passes (9 shift-adds instead
+    of 26 gathers) and the center is subtracted — pure adds, bit-exact
+    for integer CA aggregates. Every other set (e.g. HEAT3D's 6-point
+    orthogonal Laplacian) falls back to the zero-skipping gather loop.
+    """
+    d = padded.shape[-3] - 2
+    h = padded.shape[-2] - 2
+    w = padded.shape[-1] - 2
+    uniq = set(weights)
+    if len(uniq) == 1 and 0 not in uniq:
+        wt = uniq.pop()
+        x = padded.astype(agg_dtype)
+        # three separable passes: z, then y (spanning padded x so the
+        # final pass can shift it), then x; minus the center
+        slabs = x[..., 0:d, :, :] + x[..., 1:d + 1, :, :] \
+            + x[..., 2:d + 2, :, :]
+        rows = slabs[..., 0:h, :] + slabs[..., 1:h + 1, :] \
+            + slabs[..., 2:h + 2, :]
+        sum27 = rows[..., 0:w] + rows[..., 1:w + 1] + rows[..., 2:w + 2]
+        return _scaled(sum27 - x[..., 1:d + 1, 1:h + 1, 1:w + 1], wt,
+                       agg_dtype)
+    agg = jnp.zeros(padded.shape[:-3] + (d, h, w), agg_dtype)
+    for (dx, dy, dz), wt in zip(MOORE3_DIRS, weights):
+        if wt == 0:
+            continue
+        sl = padded[..., 1 + dz:d + 1 + dz, 1 + dy:h + 1 + dy,
+                    1 + dx:w + 1 + dx]
+        agg = agg + _scaled(sl.astype(agg_dtype), wt, agg_dtype)
     return agg

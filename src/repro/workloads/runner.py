@@ -30,6 +30,13 @@ r, m, workload, k)``. This module provides the building block:
   * trace/build counters (``RunnerStats``) so reuse is *testable* — the
     suite asserts >= 8 concurrent simulations share one compiled engine.
 
+The runner is dimension-agnostic: the 3D kinds ('bb3d' | 'cell3d' |
+'block3d' | 'pallas-3d' | 'pallas-3d-mxu') dispatch states with 3D
+spatial trailing axes — (B, nx, ny, nz) cell states, (B, n_blocks, rho,
+rho, rho) block states — through the same vmapped-step/fused-run/LRU
+machinery; 'block3d' and 'pallas-3d*' are block kinds, so the fusion
+depth ``k`` participates in their cache key exactly as in 2D.
+
 See DESIGN.md Section 3.
 """
 from __future__ import annotations

@@ -8,7 +8,6 @@ import pytest
 
 from repro import configs
 from repro.models import model as model_lib
-from repro.models import transformer
 
 ARCHS = list(configs.ALL_ARCHS)
 

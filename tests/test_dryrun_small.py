@@ -26,8 +26,9 @@ def test_full_matrix_results_exist_and_pass():
         "dryrun_results.jsonl"
     if not path.exists():
         import pytest
-        pytest.skip("full matrix not yet run (python -m repro.launch.dryrun --all)")
-    rows = [json.loads(l) for l in open(path)]
+        pytest.skip(
+            "full matrix not yet run (python -m repro.launch.dryrun --all)")
+    rows = [json.loads(line) for line in open(path)]
     ok = [r for r in rows if r.get("ok")]
     assert len(ok) >= 68, f"only {len(ok)} passing cells"
     meshes = {r["mesh"] for r in ok}

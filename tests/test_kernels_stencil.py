@@ -1,6 +1,5 @@
 """Fused block-level stencil kernels vs the jnp oracle (life_blocks_ref),
 and end-to-end vs the BB engine through expanded space."""
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -42,7 +41,6 @@ def test_stencil_kernel_matches_oracle(frac, r, m, variant):
 def test_stencil_kernel_matches_bb_end_to_end(variant):
     frac, r, m = fractals.SIERPINSKI, 6, 2
     layout = BlockLayout(frac, r, m)
-    eng = SqueezeBlockEngine(layout)
     bb = BBEngine(frac, r)
     step = STEPS[variant]
 

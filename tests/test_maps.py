@@ -49,7 +49,7 @@ def test_sierpinski_hnu_matches_paper_hash():
     assert f.h_nu[0, 1] == -1  # the single hole
 
 
-# ------------------------------------------------------------ lambda is a bijection
+# --------------------------------------------------- lambda is a bijection
 @pytest.mark.parametrize("frac", ALL_FRACTALS, ids=lambda f: f.name)
 @pytest.mark.parametrize("r", [1, 2, 3])
 def test_lambda_bijects_compact_onto_fractal(frac, r):
@@ -85,7 +85,7 @@ def test_membership_matches_mask(frac, r):
     np.testing.assert_array_equal(np.asarray(got), want)
 
 
-# --------------------------------------------------------- scalar spec equality
+# -------------------------------------------------- scalar spec equality
 @pytest.mark.parametrize("frac", ALL_FRACTALS, ids=lambda f: f.name)
 def test_vectorised_matches_scalar_spec(frac):
     r = 3
@@ -158,7 +158,7 @@ def test_property_matmul_matches_scalar(args):
 @given(st.integers(min_value=1, max_value=18))
 @settings(max_examples=30, deadline=None)
 def test_property_sierpinski_deep_levels_roundtrip(r):
-    """Deep-level roundtrip on random corner-ish coordinates (no O(k^r) scan)."""
+    """Deep-level roundtrip on random corner-ish coords (no O(k^r) scan)."""
     frac = fractals.SIERPINSKI
     rows, cols = frac.compact_dims(r)
     rng = np.random.default_rng(r)

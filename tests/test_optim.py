@@ -59,7 +59,6 @@ def test_quantized_states_are_small_and_roundtrip():
 
 def test_grad_compression_error_feedback_is_unbiased():
     """Sum of compressed grads ~ sum of true grads (residual carries)."""
-    cfg = adamw.AdamWConfig(compress_grads=True)
     rng = jax.random.PRNGKey(1)
     residual = jnp.zeros((256,))
     total_true = jnp.zeros((256,))

@@ -1,0 +1,285 @@
+"""The 3D performance stack: block layout geometry, fused k-stepping,
+Pallas kernels, cached runs, and the batched runner in 3D.
+
+Covers: depth-k 3D halo geometry vs expanded-space windows (offset
+tables, halo masks, pad_with_halo_k), the cross-engine parity matrix
+(bb3d / cell3d / block3d / pallas-3d / pallas-3d-mxu) x workload
+(LIFE3D bit-exact, HEAT3D allclose) x k including the remainder path
+and k > rho across block-level holes, the z-slab MXU weight
+factorization, buffer donation + the cached-jit (no-retrace) run fix
+for ``Squeeze3DEngine``, and the batched runner's 3D dispatch with k in
+the cache key.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fractals3d as f3
+from repro.core.compact3d import BlockLayout3D
+from repro.core.stencil import make_engine
+from repro.kernels import squeeze_stencil3d as k3
+from repro.workloads import HEAT3D, LIFE3D, BatchedRunner
+from repro.workloads.base import MOORE3_DIRS
+
+ALL_WORKLOADS = [LIFE3D, HEAT3D]
+WL_IDS = [w.name for w in ALL_WORKLOADS]
+
+CASES = [
+    (f3.SIERPINSKI3D, 4, 1),   # rho = 2, holes everywhere
+    (f3.MENGER, 2, 1),         # rho = 3, interior holes
+]
+CASE_IDS = [f"{f.name}-r{r}-m{m}" for f, r, m in CASES]
+
+BLOCK_KINDS = ["block3d", "pallas-3d", "pallas-3d-mxu"]
+
+
+def _tol(wl):
+    return dict(rtol=0, atol=0) if wl.dtype == jnp.uint8 \
+        else dict(rtol=1e-5, atol=1e-5)
+
+
+def _single_steps(eng, state, n):
+    for _ in range(n):
+        state = eng.step(state)
+    return state
+
+
+def _random_block_state(layout, seed=0):
+    rng = np.random.default_rng(seed)
+    rho = layout.rho
+    s = rng.integers(0, 9, (layout.n_blocks, rho, rho, rho))
+    return jnp.asarray(s.astype(np.float32)
+                       * np.asarray(layout.micro_mask))
+
+
+# ------------------------------------------------------ depth-k geometry
+@pytest.mark.parametrize("frac,r,m", CASES, ids=CASE_IDS)
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_halo3_geometry_matches_expanded_windows(frac, r, m, k):
+    """halo_mask(k) and pad_with_halo_k(s, k) must equal the depth-k
+    window around each block cut from zero-padded expanded space — at
+    every depth, including k > rho (multi-ring offset tables) and
+    across out-of-fractal (ghost) regions."""
+    layout = BlockLayout3D(frac, r, m)
+    rho = layout.rho
+    s = _random_block_state(layout, seed=1)
+    mask_pad = np.pad(np.asarray(frac.mask(r)), k)
+    state_pad = np.pad(np.asarray(layout.to_expanded(s)), k)
+    hmask = layout.halo_mask(k)
+    padded = np.asarray(layout.pad_with_halo_k(s, k))
+    w = rho + 2 * k
+    for b, (ox, oy, oz) in enumerate(layout.block_origin_expanded):
+        np.testing.assert_array_equal(
+            hmask[b], mask_pad[oz:oz + w, oy:oy + w, ox:ox + w],
+            err_msg=f"halo_mask block {b}")
+        np.testing.assert_array_equal(
+            padded[b], state_pad[oz:oz + w, oy:oy + w, ox:ox + w],
+            err_msg=f"pad_with_halo_k block {b}")
+
+
+def test_offset_table3_depth1_is_neighbor_table():
+    layout = BlockLayout3D(f3.MENGER, 2, 1)
+    assert layout.halo_offsets(layout.rho) == MOORE3_DIRS
+    np.testing.assert_array_equal(layout.offset_table(2),
+                                  layout.neighbor_table)
+    assert layout.neighbor_table.shape == (layout.n_blocks, 26)
+
+
+def test_roundtrip_and_memory():
+    layout = BlockLayout3D(f3.SIERPINSKI3D, 4, 2)
+    s = _random_block_state(layout, seed=2)
+    np.testing.assert_array_equal(
+        np.asarray(layout.from_expanded(layout.to_expanded(s))),
+        np.asarray(s))
+    # block state stores expanded rho^3 micro-cubes (micro-holes incl.):
+    # n_blocks * rho^3, never less than the compact cell count
+    assert layout.memory_bytes() == layout.n_blocks * layout.rho ** 3
+    assert layout.memory_bytes() >= layout.frac.volume(layout.r)
+    # the memory win vs the bounding volume is the block-level MRF
+    bb = layout.frac.side(layout.r) ** 3
+    assert bb / layout.memory_bytes() == layout.frac.mrf(layout.r_b)
+
+
+def test_weight_factors3_reconstruct_exactly():
+    """Every z-plane's rank-1 terms must rebuild that plane of the
+    (3,3,3) weight tensor exactly — the z-slab MXU formulation's
+    correctness precondition."""
+    for wl in ALL_WORKLOADS:
+        w3 = wl.weights3x3x3
+        for dz in (-1, 0, 1):
+            plane = w3[dz + 1]
+            recon = np.zeros((3, 3), np.float64)
+            for row, col in wl.weight_factors3[dz + 1]:
+                recon += np.outer(row, col)
+            np.testing.assert_allclose(recon, plane, rtol=0, atol=1e-12,
+                                       err_msg=f"{wl.name} dz={dz}")
+        # no plane of a live workload may be silently dropped
+        assert any(wl.weight_factors3), wl.name
+
+
+# ------------------------------------------------ cross-engine parity
+@pytest.mark.parametrize("frac,r,m", CASES, ids=CASE_IDS)
+@pytest.mark.parametrize("wl", ALL_WORKLOADS, ids=WL_IDS)
+@pytest.mark.parametrize("kind",
+                         ["cell3d", "block3d", "pallas-3d", "pallas-3d-mxu"])
+def test_3d_engines_match_bb_oracle(frac, r, m, wl, kind):
+    bb = make_engine("bb3d", frac, r, workload=wl)
+    eng = make_engine(kind, frac, r, m, workload=wl)
+    s_bb = bb.init_random(seed=5)
+    s = eng.init_random(seed=5)
+    np.testing.assert_allclose(np.asarray(eng.to_expanded(s)),
+                               np.asarray(s_bb), **_tol(wl))
+    for step in range(3):
+        s_bb = bb.step(s_bb)
+        s = eng.step(s)
+        np.testing.assert_allclose(
+            np.asarray(eng.to_expanded(s)), np.asarray(s_bb), **_tol(wl),
+            err_msg=f"{kind}/{wl.name} diverged at step {step}")
+
+
+@pytest.mark.parametrize("frac,r,m", CASES, ids=CASE_IDS)
+@pytest.mark.parametrize("wl", ALL_WORKLOADS, ids=WL_IDS)
+@pytest.mark.parametrize("kind", BLOCK_KINDS)
+@pytest.mark.parametrize("k", [1, 2, "rho"])
+def test_3d_step_k_matches_single_steps(frac, r, m, wl, kind, k):
+    rho = frac.s ** m
+    k = rho if k == "rho" else k
+    blk = make_engine("block3d", frac, r, m, workload=wl)
+    eng = blk if kind == "block3d" else make_engine(kind, frac, r, m,
+                                                    workload=wl)
+    s = blk.init_random(seed=5)
+    np.testing.assert_allclose(
+        np.asarray(eng.step_k(s, k)),
+        np.asarray(_single_steps(blk, s, k)), **_tol(wl),
+        err_msg=f"{kind}/{wl.name}/k={k}")
+
+
+def test_3d_step_k_beyond_rho_multi_ring():
+    """k > rho spans multiple block rings: the XLA path's offset tables
+    must resolve blocks beyond holes exactly at depth > one ring."""
+    frac, r, m = f3.SIERPINSKI3D, 4, 1  # rho = 2
+    eng = make_engine("block3d", frac, r, m, workload=LIFE3D)
+    s = eng.init_random(seed=8)
+    k = eng.layout.rho + 1
+    assert eng.layout.halo_block_radius(k) == 2
+    np.testing.assert_array_equal(
+        np.asarray(eng.step_k(s, k)),
+        np.asarray(_single_steps(eng, s, k)))
+
+
+@pytest.mark.parametrize("kind", BLOCK_KINDS)
+@pytest.mark.parametrize("k,steps", [(2, 5), (3, 4)])
+def test_3d_fused_run_remainder_path(kind, k, steps):
+    frac, r, m = f3.MENGER, 2, 1  # rho = 3
+    eng = make_engine(kind, frac, r, m, workload=HEAT3D, fusion_k=k)
+    assert eng.effective_fusion_k == k
+    s = eng.init_random(seed=9)
+    np.testing.assert_allclose(
+        np.asarray(eng.run(s, steps)),
+        np.asarray(_single_steps(eng, s, steps)),
+        rtol=1e-5, atol=1e-5, err_msg=f"{kind}/k={k}/steps={steps}")
+
+
+def test_pallas3d_rejects_k_beyond_rho():
+    frac, r, m = f3.SIERPINSKI3D, 4, 1  # rho = 2
+    layout = BlockLayout3D(frac, r, m)
+    s = jnp.zeros((layout.n_blocks, 2, 2, 2), jnp.uint8)
+    with pytest.raises(ValueError, match="k <= rho"):
+        k3.stencil3d_step_fused_k(layout, s, LIFE3D, k=3)
+    with pytest.raises(ValueError, match="k <= rho"):
+        k3.stencil3d_step_mxu_k(layout, s, LIFE3D, k=3)
+    with pytest.raises(ValueError, match="fusion_k"):
+        make_engine("pallas-3d", frac, r, m, workload=LIFE3D, fusion_k=3)
+
+
+def test_3d_engines_reject_wrong_workloads():
+    from repro.workloads import GRAY_SCOTT, HEAT
+    with pytest.raises(ValueError, match="single-channel"):
+        make_engine("cell3d", f3.SIERPINSKI3D, 3, workload=GRAY_SCOTT)
+    with pytest.raises(ValueError, match="2D-only"):
+        make_engine("block3d", f3.SIERPINSKI3D, 3, 1, workload=HEAT)
+
+
+# ------------------------------------------------- cached runs / donation
+def _donation_supported() -> bool:
+    f = jax.jit(lambda x: x + 1.0, donate_argnums=0)
+    x = jnp.zeros(16)
+    f(x)
+    return x.is_deleted()
+
+
+def test_cell3d_run_does_not_retrace_per_step_count():
+    """``Squeeze3DEngine.run`` compiles once; the step count is a traced
+    loop bound (the old bare fori_loop retraced per distinct count)."""
+    eng = make_engine("cell3d", f3.SIERPINSKI3D, 4, workload=LIFE3D)
+    s = eng.init_random(seed=1)
+    eng.run(s, 2)
+    n1 = eng._run._cache_size()
+    out = eng.run(s, 7)
+    assert eng._run._cache_size() == n1
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(_single_steps(eng, s, 7)))
+
+
+@pytest.mark.parametrize("kind", ["cell3d", "block3d", "pallas-3d"])
+def test_3d_donated_run_consumes_input(kind):
+    if not _donation_supported():
+        pytest.skip("backend does not implement buffer donation")
+    eng = make_engine(kind, f3.SIERPINSKI3D, 4, 1, workload=HEAT3D)
+    s = eng.init_random(seed=3)
+    ref = _single_steps(eng, s, 4)
+    out = eng.run(s, 4, donate=True)
+    assert s.is_deleted()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------- batched runner
+def test_runner_dispatches_3d_states():
+    frac, r, m = f3.SIERPINSKI3D, 4, 1
+    runner = BatchedRunner()
+    states = runner.init_batch("block3d", frac, r, seeds=range(3), m=m,
+                               workload=LIFE3D)
+    assert states.shape == (3, frac.volume(r - m), 2, 2, 2)
+    ran = runner.run("block3d", frac, r, states, steps=5, m=m,
+                     workload=LIFE3D, k=2)
+    eng = runner.engine_for("block3d", frac, r, m=m, workload=LIFE3D, k=2)
+    for b in range(states.shape[0]):
+        np.testing.assert_array_equal(
+            np.asarray(ran[b]),
+            np.asarray(_single_steps(eng, states[b], 5)),
+            err_msg=f"batch {b}")
+    # expanded conversion is batched too
+    exp = runner.to_expanded("block3d", frac, r, states, m=m,
+                             workload=LIFE3D)
+    assert exp.shape == (3,) + (frac.side(r),) * 3
+
+
+def test_runner_3d_cache_key_includes_k():
+    frac, r, m = f3.SIERPINSKI3D, 4, 1  # rho = 2 -> heuristic k = 2
+    runner = BatchedRunner()
+    e_default = runner.engine_for("block3d", frac, r, m=m, workload=LIFE3D)
+    assert runner.engine_for("block3d", frac, r, m=m, workload=LIFE3D,
+                             k=2) is e_default
+    assert runner.stats.builds == 1
+    e3 = runner.engine_for("block3d", frac, r, m=m, workload=LIFE3D, k=3)
+    assert e3 is not e_default and e3.fusion_k == 3
+    # non-block 3D kinds normalize k away (one slot, no fusion)
+    runner.engine_for("cell3d", frac, r, workload=LIFE3D)
+    runner.engine_for("cell3d", frac, r, workload=LIFE3D, k=5)
+    assert runner.stats.builds == 3
+
+
+def test_runner_pallas3d_step():
+    frac, r, m = f3.MENGER, 2, 1
+    runner = BatchedRunner()
+    states = runner.init_batch("pallas-3d", frac, r, seeds=range(2), m=m,
+                               workload=HEAT3D)
+    got = runner.step("pallas-3d", frac, r, states, m=m, workload=HEAT3D)
+    eng = runner.engine_for("pallas-3d", frac, r, m=m, workload=HEAT3D)
+    for b in range(2):
+        np.testing.assert_allclose(np.asarray(got[b]),
+                                   np.asarray(eng.step(states[b])),
+                                   rtol=1e-5, atol=1e-5)
