@@ -23,6 +23,7 @@ import argparse
 import json
 import pathlib
 import sys
+import time
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
@@ -249,6 +250,107 @@ def bench_mxu(frac, r, ms, iters, batches, out_path,
                 "configurations")
 
 
+# ---------------------------------------------------- telemetry overhead
+def bench_telemetry(frac, out_path: str, max_overhead_pct: float = 2.0,
+                    rounds: int = 100, calls: int = 8) -> None:
+    """Overhead of the instrumented runner hot path (the CI telemetry
+    gate: benchmarks/ci_gates.py --gate telemetry).
+
+    Three variants of the same fused batched run (block/LIFE, r=6, m=2,
+    batch=4, steps=24 — a serving-shaped call where the dispatch is not
+    degenerate), interleaved round-robin. The gate statistic is the
+    MEDIAN OF PAIRED PER-ROUND DIFFERENCES (disabled minus direct,
+    within the same round) over the median direct round: adjacent
+    samples share whatever load the machine is under, so common-mode
+    noise cancels where a ratio of independent mins does not (a loaded
+    CI runner flips the sign of min-based ratios). The telemetry
+    overhead is a fixed few machine instructions per ``run`` call, so
+    the JSON records absolute us_per_run for all three variants
+    alongside the relative gate:
+
+    - ``direct``: the pre-PR fast path — exactly what
+      ``BatchedRunner.run`` did before instrumentation: the LRU cache
+      probe, the steps->int32 cast, and the ``batched_run`` dispatch,
+      with none of the telemetry branches.
+    - ``disabled``: ``BatchedRunner.run`` with telemetry off — the
+      instrumented code with every obs helper short-circuiting. The
+      gate: this must stay within ``max_overhead_pct`` of ``direct``.
+    - ``enabled``: the same with telemetry on (informational; the
+      opt-in cost of counters + histograms + spans per run).
+    """
+    from repro import obs
+
+    r, m, batch, steps = 6, 2, 4, 24
+    runner = BatchedRunner()
+    states = runner.init_batch("block", frac, r, seeds=range(batch), m=m,
+                               workload=LIFE)
+
+    def run_runner(s):
+        return runner.run("block", frac, r, s, steps=steps, m=m,
+                          workload=LIFE)
+
+    def run_direct(s):
+        entry = runner._get("block", frac, r, m, LIFE, None, None, None)
+        return entry.batched_run(
+            s, jax.numpy.asarray(steps, jax.numpy.int32))
+
+    prev = obs.enabled()
+    variants = {
+        "direct": (run_direct, False),
+        "disabled": (run_runner, False),
+        "enabled": (run_runner, True),
+    }
+    samples = {name: [] for name in variants}
+    try:
+        for fn, on in variants.values():  # warm every path once
+            obs.enable(on)
+            jax.block_until_ready(fn(states))
+        for _ in range(rounds):
+            for name, (fn, on) in variants.items():
+                obs.enable(on)
+                t0 = time.perf_counter()
+                for _ in range(calls):
+                    out = fn(states)
+                jax.block_until_ready(out)
+                samples[name].append((time.perf_counter() - t0) / calls)
+    finally:
+        obs.enable(prev)
+
+    def median(xs):
+        xs = sorted(xs)
+        return xs[len(xs) // 2]
+
+    us = {k: median(v) * 1e6 for k, v in samples.items()}
+    pct = {}
+    for k in ("disabled", "enabled"):
+        diffs = [b - a for a, b in zip(samples["direct"], samples[k])]
+        pct[k] = median(diffs) * 1e6 / us["direct"] * 100.0
+    for name in variants:
+        emit(f"telemetry/{name}", us[name],
+             f"r={r};m={m};b={batch};steps={steps}")
+    print(f"telemetry overhead: disabled {pct['disabled']:+.2f}% "
+          f"enabled {pct['enabled']:+.2f}% (gate: disabled <= "
+          f"{max_overhead_pct:.1f}%)")
+    out = pathlib.Path(out_path)
+    out.write_text(json.dumps({
+        "backend": jax.default_backend(),
+        "config": {"engine": "block", "workload": LIFE.name,
+                   "fractal": frac.name, "r": r, "m": m, "batch": batch,
+                   "steps": steps, "rounds": rounds,
+                   "calls_per_sample": calls},
+        "us_per_run": us,
+        "gate": {"threshold_pct": max_overhead_pct,
+                 "overhead_disabled_pct": pct["disabled"],
+                 "overhead_enabled_pct": pct["enabled"]},
+    }, indent=2))
+    print(f"wrote {out}")
+    # JSON first, so a regression still leaves the timings behind
+    if pct["disabled"] > max_overhead_pct:
+        raise SystemExit(
+            f"telemetry-disabled runner overhead {pct['disabled']:.2f}% "
+            f"> {max_overhead_pct:.1f}% over the direct fast path")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--r", type=int, default=9)
@@ -265,6 +367,14 @@ def main():
     ap.add_argument("--mxu-only", action="store_true",
                     help="run only the v5 MXU vs strips sweep + gate "
                          "(the CI MXU perf-gate step)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="run only the telemetry-overhead microbench + "
+                         "gate (the CI telemetry perf-gate step)")
+    ap.add_argument("--max-overhead-pct", type=float, default=2.0,
+                    help="telemetry gate: max %% slowdown of the "
+                         "instrumented-but-disabled runner hot path vs "
+                         "the direct fast path")
+    ap.add_argument("--telemetry-out", default="BENCH_telemetry.json")
     ap.add_argument("--mxu-ms", type=int, nargs="+", default=None,
                     help="block levels m for the MXU rho sweep "
                          "(default: {m, m+1} clipped to r)")
@@ -283,6 +393,10 @@ def main():
         args.r, args.m, args.iters = 5, 2, 2
 
     frac = fractals.SIERPINSKI
+    if args.telemetry:
+        bench_telemetry(frac, args.telemetry_out,
+                        max_overhead_pct=args.max_overhead_pct)
+        return
     if args.mxu_only:
         ms = args.mxu_ms or [m for m in (args.m, args.m + 1) if m <= args.r]
         bench_mxu(frac, args.r, ms, args.iters, tuple(args.mxu_batches),

@@ -9,6 +9,13 @@ Arrays are stored *unsharded* (device_get on save); restore device_puts
 against whatever sharding the (possibly different-sized) new mesh wants —
 that is the elastic-rescale path: a 512-chip checkpoint restores onto 256
 or 1024 chips unchanged.
+
+With telemetry enabled (``SQUEEZE_TELEMETRY``), saves and restores
+count on the default registry (``checkpoint.saves`` /
+``checkpoint.restores``) with wall-time histograms
+(``checkpoint.save_seconds`` — recorded by the writer, including the
+async thread — and ``checkpoint.restore_seconds``) and a
+``checkpoint.bytes`` gauge of the last save's payload.
 """
 from __future__ import annotations
 
@@ -17,10 +24,13 @@ import os
 import re
 import shutil
 import threading
+import time
 from typing import Any, Callable, List, Optional
 
 import jax
 import numpy as np
+
+from repro import obs
 
 _STEP_RE = re.compile(r"^step_(\d{8})$")
 
@@ -66,6 +76,7 @@ class CheckpointManager:
         return os.path.join(self.dir, f"step_{step:08d}")
 
     def _write(self, step: int, names: List[str], leaves) -> str:
+        t0 = time.perf_counter() if obs.enabled() else None
         final = self._final_path(step)
         tmp = final + ".tmp"
         if os.path.exists(tmp):
@@ -86,6 +97,12 @@ class CheckpointManager:
             shutil.rmtree(final)
         os.replace(tmp, final)
         self._gc()
+        if t0 is not None:
+            obs.observe("checkpoint.save_seconds",
+                        time.perf_counter() - t0)
+            obs.inc("checkpoint.saves")
+            obs.set_gauge("checkpoint.bytes",
+                          sum(int(a.nbytes) for a in leaves))
         return final
 
     def _gc(self):
@@ -114,6 +131,7 @@ class CheckpointManager:
         ``put(name, array)`` may device_put with a new sharding (elastic
         restore); default leaves arrays on host (jnp will ingest lazily).
         """
+        t0 = time.perf_counter() if obs.enabled() else None
         if step is None:
             step = self.latest_step()
         if step is None:
@@ -134,4 +152,9 @@ class CheckpointManager:
                 raise ValueError(
                     f"{name}: checkpoint shape {arr.shape} != {ref.shape}")
             out.append(put(name, arr) if put else arr)
-        return jax.tree_util.tree_unflatten(treedef, out)
+        tree = jax.tree_util.tree_unflatten(treedef, out)
+        if t0 is not None:
+            obs.observe("checkpoint.restore_seconds",
+                        time.perf_counter() - t0)
+            obs.inc("checkpoint.restores")
+        return tree

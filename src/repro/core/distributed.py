@@ -48,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.core.compact import BlockLayout
 from repro.workloads.base import StencilWorkload, check_workload_ndim
 from repro.workloads.rules import LIFE
@@ -171,9 +172,20 @@ class DistributedSqueezeEngine:
 
     def _account(self, k: int, launches: int, batch: int) -> None:
         st = self._stats
+        strip_bytes = launches * self.strip_bytes(k, batch)
         st.steps += launches * k
         st.collectives += launches
-        st.bytes_gathered += launches * self.strip_bytes(k, batch)
+        st.bytes_gathered += strip_bytes
+        if obs.enabled():
+            # the same accounting, unified onto the telemetry registry
+            # (labeled by compute backend) so one obs.report() answers
+            # "how many collectives and bytes did this run ship"
+            obs.inc("dist.steps", launches * k, compute=self.compute)
+            obs.inc("dist.collectives", launches, compute=self.compute)
+            obs.inc("dist.bytes_gathered", strip_bytes,
+                    compute=self.compute)
+            obs.inc("engine.fused_launches", launches,
+                    engine=type(self).__name__, variant=self.compute)
 
     def memory_bytes(self, dtype_size: Optional[int] = None) -> int:
         """Total (all-shard) Squeeze state bytes, padding blocks included
@@ -453,14 +465,19 @@ class DistributedSqueezeEngine:
         b = s5.shape[0]
         k = self.effective_fusion_k
         n_fused, rem = divmod(steps, k)
-        if n_fused:
-            s5 = self._loop_fn(k, donate)(
-                s5, jnp.asarray(n_fused, jnp.int32),
-                *self._shard_operands(k))
-            self._account(k, n_fused, b)
-        if rem:
-            s5 = self._call_step(rem, s5, donate)
-            self._account(rem, 1, b)
+        with obs.span("dist.run", compute=self.compute, steps=steps,
+                      k=k, batch=b):
+            if n_fused:
+                s5 = self._loop_fn(k, donate)(
+                    s5, jnp.asarray(n_fused, jnp.int32),
+                    *self._shard_operands(k))
+                self._account(k, n_fused, b)
+            if rem:
+                s5 = self._call_step(rem, s5, donate)
+                self._account(rem, 1, b)
+        if donate:
+            obs.inc("engine.donated_runs",
+                    engine=type(self).__name__, variant=self.compute)
         return self._uncanon(s5, batched)
 
     def lowered_step_text(self, state: Array, k: int) -> str:

@@ -35,6 +35,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import maps
 from repro.core.baselines import (BBEngine, _moore_counts,  # noqa: F401
                                   life_rule)
@@ -68,14 +69,23 @@ class _CachedRun:
     """Cached-jit run machinery: hosts define ``_run_impl(state, steps)``
     with a *traced* steps scalar, and their ``run`` dispatches through
     ``_dispatch_run`` — one plain and one ``donate_argnums`` compilation
-    per engine value, neither retracing when the step count changes."""
+    per engine value, neither retracing when the step count changes.
+
+    The ``engine.trace`` counter increments only while jax traces the
+    body (cached dispatches skip it), so the telemetry registry turns
+    "changing the step count must not retrace" into an assertable
+    invariant (see tests/test_obs.py; counts appear only if telemetry
+    was enabled at trace time)."""
 
     @partial(jax.jit, static_argnums=0)
     def _run(self, state: Array, steps) -> Array:
+        obs.inc("engine.trace", engine=type(self).__name__, fn="run")
         return self._run_impl(state, steps)
 
     @partial(jax.jit, static_argnums=0, donate_argnums=1)
     def _run_donated(self, state: Array, steps) -> Array:
+        obs.inc("engine.trace", engine=type(self).__name__,
+                fn="run_donated")
         return self._run_impl(state, steps)
 
     def _dispatch_run(self, state: Array, steps, donate: bool) -> Array:
@@ -115,10 +125,29 @@ class _FusedStepping(_CachedRun):
         plus a steps%k single-step remainder (``steps`` stays a dynamic
         loop bound: changing it does not retrace). ``donate=True`` donates
         the input state buffer to XLA — zero-copy steady-state stepping;
-        the caller must not reuse ``state`` afterwards."""
+        the caller must not reuse ``state`` afterwards.
+
+        With telemetry enabled, each call counts its fused launches,
+        remainder single steps and donation usage on the registry
+        (``engine.fused_launches`` / ``engine.single_steps`` /
+        ``engine.donated_runs``, labeled by engine class + Pallas
+        variant)."""
         k = self.effective_fusion_k
         if k > 1:                 # the k<=1 path never touches halo tables
             self._materialize_fused(k)
+        if obs.enabled():
+            n = int(steps)
+            lbl = dict(engine=type(self).__name__,
+                       variant=getattr(self, "variant", ""))
+            obs.inc("engine.runs", **lbl)
+            obs.inc("engine.steps", n, **lbl)
+            if k > 1:
+                obs.inc("engine.fused_launches", n // k, **lbl)
+                obs.inc("engine.single_steps", n % k, **lbl)
+            else:
+                obs.inc("engine.single_steps", n, **lbl)
+            if donate:
+                obs.inc("engine.donated_runs", **lbl)
         return self._dispatch_run(state, steps, donate)
 
 
@@ -393,7 +422,30 @@ def make_engine(kind: str, frac, r: int, m: int = 0,
     ``BlockLayout3D`` (XLA path, any fusion depth), 'pallas-3d' the
     fused depth-k 3D kernel and 'pallas-3d-mxu' the z-slab MXU
     stencil-as-matmul kernel (both k <= rho). See DESIGN.md Section 5.
+
+    With telemetry enabled, every build counts ``engine.builds`` and
+    sets the ``engine.memory_bytes`` gauge (compact-state footprint at
+    the workload dtype), both labeled by ``kind``.
     """
+    engine = _make_engine(kind, frac, r, m, workload, fusion_k, mesh,
+                          axis)
+    if obs.enabled():
+        obs.inc("engine.builds", kind=kind)
+        if hasattr(engine, "memory_bytes"):
+            try:
+                itemsize = jnp.dtype(workload.dtype).itemsize
+                obs.set_gauge("engine.memory_bytes",
+                              engine.memory_bytes(dtype_size=itemsize),
+                              kind=kind)
+            except TypeError:  # engines with a fixed internal dtype
+                obs.set_gauge("engine.memory_bytes",
+                              engine.memory_bytes(), kind=kind)
+    return engine
+
+
+def _make_engine(kind: str, frac, r: int, m: int,
+                 workload: StencilWorkload, fusion_k: Optional[int],
+                 mesh, axis: str):
     from repro.core.baselines import LambdaEngine
     if kind in ("bb3d", "cell3d", "block3d") or kind.startswith("pallas-3d"):
         from repro.core import stencil3d as s3

@@ -6,11 +6,20 @@ CPU-only; the kernels are validated in interpret mode per the kernel
 tests). Pass an explicit bool to pin it. Resolution happens once, in the
 kernel entry points (``kernels.common.resolve_interpret``); these
 wrappers pass ``interpret`` through untouched.
+
+With telemetry enabled, every stencil entry point counts
+``kernel.entry{op=...}`` on the registry. The wrapper body runs once
+per *Python-level* entry: eagerly that is one count per kernel
+dispatch; inside a jit (the engines' cached run loops) it runs only
+while tracing — so a growing ``kernel.entry`` under a cached jit is a
+retrace detector, the same discipline as ``engine.trace`` (DESIGN.md
+Section 7).
 """
 from __future__ import annotations
 
 from typing import Optional
 
+from repro import obs
 from repro.core.compact import BlockLayout
 from repro.core.fractals import NBBFractal
 from repro.kernels.common import default_interpret  # noqa: F401  re-export
@@ -36,6 +45,7 @@ def lambda_map_tc(frac: NBBFractal, r: int, cx, cy, *,
 def stencil_step_blocks(layout: BlockLayout, state, workload=LIFE, *,
                         interpret: Optional[bool] = None):
     """Fused block-level workload step, v1 (neighbor-block staging)."""
+    obs.inc("kernel.entry", op="stencil_step_blocks")
     return _stencil.stencil_step_blocks(layout, state, workload,
                                         interpret=interpret)
 
@@ -43,6 +53,7 @@ def stencil_step_blocks(layout: BlockLayout, state, workload=LIFE, *,
 def stencil_step_strips(layout: BlockLayout, state, workload=LIFE, *,
                         interpret: Optional[bool] = None):
     """Fused block-level workload step, v2 (strip halos)."""
+    obs.inc("kernel.entry", op="stencil_step_strips")
     return _stencil.stencil_step_strips(layout, state, workload,
                                         interpret=interpret)
 
@@ -50,6 +61,7 @@ def stencil_step_strips(layout: BlockLayout, state, workload=LIFE, *,
 def stencil_step_fused(layout: BlockLayout, state, workload=LIFE, *,
                        interpret: Optional[bool] = None):
     """Fused block-level workload step, v3 (in-kernel strip reads)."""
+    obs.inc("kernel.entry", op="stencil_step_fused")
     return _stencil.stencil_step_fused(layout, state, workload,
                                        interpret=interpret)
 
@@ -58,6 +70,7 @@ def stencil_step_fused_k(layout: BlockLayout, state, workload=LIFE, *,
                          k: int = 2, interpret: Optional[bool] = None):
     """Fused block-level workload step, v4 (temporal fusion): k exact
     steps per launch on a depth-k halo tile held in VMEM. k <= rho."""
+    obs.inc("kernel.entry", op="stencil_step_fused_k")
     return _stencil.stencil_step_fused_k(layout, state, workload, k=k,
                                          interpret=interpret)
 
@@ -66,6 +79,7 @@ def stencil_step_mxu(layout: BlockLayout, state, workload=LIFE, *,
                      interpret: Optional[bool] = None):
     """Fused block-level workload step, v5 (MXU stencil-as-matmul on
     lane-packed macro-tiles)."""
+    obs.inc("kernel.entry", op="stencil_step_mxu")
     return _stencil.stencil_step_mxu(layout, state, workload,
                                      interpret=interpret)
 
@@ -74,6 +88,7 @@ def stencil_step_mxu_k(layout: BlockLayout, state, workload=LIFE, *,
                        k: int = 2, interpret: Optional[bool] = None):
     """Fused block-level workload step, v5 temporal fusion: k exact steps
     per MXU macro-tile launch (k <= rho)."""
+    obs.inc("kernel.entry", op="stencil_step_mxu_k")
     return _stencil.stencil_step_mxu_k(layout, state, workload, k=k,
                                        interpret=interpret)
 
@@ -82,6 +97,7 @@ def stencil_step_mxu_batched(layout: BlockLayout, states, workload=LIFE, *,
                              k: int = 1, interpret: Optional[bool] = None):
     """v5 native batch grid: B simulations x k exact steps in one kernel
     dispatch over (B, n_macro_tiles); states (B, C?, n_blocks, rho, rho)."""
+    obs.inc("kernel.entry", op="stencil_step_mxu_batched")
     return _stencil.stencil_step_mxu_batched(layout, states, workload, k=k,
                                              interpret=interpret)
 
@@ -91,6 +107,7 @@ def stencil3d_step_fused_k(layout, state, workload=None, *, k: int = 2,
     """Fused 3D block-level workload step (v4-style temporal fusion):
     k exact steps per launch on a depth-k (rho+2k)^3 window in VMEM.
     ``layout`` is a ``compact3d.BlockLayout3D``; k <= rho."""
+    obs.inc("kernel.entry", op="stencil3d_step_fused_k")
     from repro.kernels import squeeze_stencil3d as _s3
     from repro.workloads.rules import LIFE3D
     return _s3.stencil3d_step_fused_k(
@@ -103,6 +120,7 @@ def stencil3d_step_mxu_k(layout, state, workload=None, *, k: int = 1,
     """Fused 3D block-level workload step (v5-style MXU): the 26-cell
     aggregation as banded matmuls per z-slab on lane-packed macro-tiles.
     ``layout`` is a ``compact3d.BlockLayout3D``; k <= rho."""
+    obs.inc("kernel.entry", op="stencil3d_step_mxu_k")
     from repro.kernels import squeeze_stencil3d as _s3
     from repro.workloads.rules import LIFE3D
     return _s3.stencil3d_step_mxu_k(
@@ -113,12 +131,14 @@ def stencil3d_step_mxu_k(layout, state, workload=None, *, k: int = 1,
 def life_step_blocks(layout: BlockLayout, state, *,
                      interpret: Optional[bool] = None):
     """Fused block-level GoL step, v1 (neighbor-block staging)."""
+    obs.inc("kernel.entry", op="life_step_blocks")
     return _stencil.life_step_blocks(layout, state, interpret=interpret)
 
 
 def life_step_strips(layout: BlockLayout, state, *,
                      interpret: Optional[bool] = None):
     """Fused block-level GoL step, v2 (strip halos; lower HBM traffic)."""
+    obs.inc("kernel.entry", op="life_step_strips")
     return _stencil.life_step_strips(layout, state, interpret=interpret)
 
 
@@ -126,6 +146,7 @@ def life_step_fused(layout: BlockLayout, state, *,
                     interpret: Optional[bool] = None):
     """Fused block-level GoL step, v3 (in-kernel strip reads; no halo
     tensor materialised)."""
+    obs.inc("kernel.entry", op="life_step_fused")
     return _stencil.life_step_fused(layout, state, interpret=interpret)
 
 

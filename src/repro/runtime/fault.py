@@ -5,46 +5,81 @@ At 1000+ nodes the failure model is: frequent single-host preemptions
 (handled by checkpoint/restart — the supervisor here), slow hosts
 (watchdog surfaces p95 outliers so the scheduler can cordon them), and
 rare corrupt saves (prevented by the manager's atomic rename protocol).
+
+Accounting lives on the telemetry registry (``repro.obs``): the
+watchdog's step times land in a ``watchdog.step_seconds`` histogram
+(one labeled series per watchdog — the bespoke ring buffer of samples
+is gone), straggler fires count ``watchdog.stragglers``, and the
+restart supervisor counts ``fault.restarts``. These record regardless
+of the ``SQUEEZE_TELEMETRY`` toggle: constructing a watchdog or a
+supervisor IS the opt-in, and both are control-flow state (the
+straggler median and the give-up bound read them back), not optional
+telemetry.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import signal
 import time
-from typing import Callable, List, Optional
+from typing import Callable, Optional
+
+from repro.obs import Histogram, default_registry
 
 
 class SimulatedFailure(RuntimeError):
     """Raised by tests / chaos hooks to emulate a mid-run crash."""
 
 
+#: distinct default label per Watchdog instance, so two watchdogs (e.g.
+#: successive train() calls in one process) never mix their step-time
+#: distributions — the straggler median must see only its own steps
+_WD_IDS = itertools.count()
+
+
 @dataclasses.dataclass
 class Watchdog:
-    """Tracks step wall-times; flags stragglers beyond k x median."""
+    """Tracks step wall-times; flags stragglers beyond k x median.
+
+    Samples live in the ``watchdog.step_seconds`` histogram on the
+    default registry (``.histogram`` — exported by obs.report(), JSONL
+    and Prometheus like every other metric); the straggler threshold
+    uses its bucket-interpolated p50. ``name`` labels the series
+    (default: a fresh ``wd<N>`` per instance).
+    """
     straggler_factor: float = 3.0
-    window: int = 50
-    _times: List[float] = dataclasses.field(default_factory=list)
+    name: Optional[str] = None
+    min_samples: int = 5
     _t0: Optional[float] = None
     stragglers: int = 0
+
+    def __post_init__(self):
+        if self.name is None:
+            self.name = f"wd{next(_WD_IDS)}"
+
+    @property
+    def histogram(self) -> Histogram:
+        """The step-time samples (seconds) of this watchdog."""
+        return default_registry().histogram("watchdog.step_seconds",
+                                            watchdog=self.name)
 
     def start_step(self):
         self._t0 = time.monotonic()
 
     def end_step(self) -> float:
         dt = time.monotonic() - self._t0
-        self._times.append(dt)
-        if len(self._times) > self.window:
-            self._times.pop(0)
-        med = sorted(self._times)[len(self._times) // 2]
-        if len(self._times) >= 5 and dt > self.straggler_factor * med:
+        h = self.histogram
+        h.record(dt)
+        if (h.count > self.min_samples
+                and dt > self.straggler_factor * h.percentile(0.5)):
             self.stragglers += 1
+            default_registry().counter("watchdog.stragglers",
+                                       watchdog=self.name).inc()
         return dt
 
     @property
     def median(self) -> float:
-        if not self._times:
-            return 0.0
-        return sorted(self._times)[len(self._times) // 2]
+        return self.histogram.percentile(0.5)
 
 
 class PreemptionHandler:
@@ -73,12 +108,18 @@ def run_with_restarts(make_run: Callable[[], int], max_restarts: int = 3
 
     Returns the final step. ``make_run`` must be idempotent-from-
     checkpoint — with the stateless data pipeline and bit-exact restore
-    this makes the whole trajectory restart-invariant (tested)."""
-    attempts = 0
+    this makes the whole trajectory restart-invariant (tested).
+
+    Restarts count on the default registry's ``fault.restarts`` counter
+    (the process-lifetime total a supervisor dashboard wants); the
+    per-invocation give-up bound is the delta against the counter value
+    at entry."""
+    counter = default_registry().counter("fault.restarts")
+    start = counter.value
     while True:
         try:
             return make_run()
         except SimulatedFailure:
-            attempts += 1
-            if attempts > max_restarts:
+            counter.inc()
+            if counter.value - start > max_restarts:
                 raise

@@ -42,12 +42,14 @@ See DESIGN.md Section 3.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict
 from typing import TYPE_CHECKING, Hashable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.workloads.base import StencilWorkload
 from repro.workloads.rules import LIFE
 
@@ -76,6 +78,14 @@ def _is_dist(kind: str) -> bool:
 
 @dataclasses.dataclass
 class RunnerStats:
+    """Legacy per-runner counters (kept: cheap, always on, asserted by
+    the reuse tests). The labeled equivalents land on the telemetry
+    registry when ``SQUEEZE_TELEMETRY`` is enabled: ``runner.cache.{hit,
+    miss,evict}``, ``runner.build`` / ``runner.trace`` (per-key compile
+    counts), ``runner.runs`` + ``runner.run.seconds`` latency
+    histograms, ``runner.batch_size`` / ``runner.steps`` histograms —
+    see DESIGN.md Section 7."""
+
     builds: int = 0    # engines constructed (LRU misses)
     traces: int = 0    # jax traces of the batched step (recompilations)
     evictions: int = 0
@@ -127,7 +137,10 @@ class BatchedRunner:
         entry = self._cache.get(key)
         if entry is not None:
             self._cache.move_to_end(key)
+            obs.inc("runner.cache.hit", kind=kind)
             return entry
+        obs.inc("runner.cache.miss", kind=kind)
+        obs.inc("runner.build", kind=kind, workload=workload.name, k=k)
         from repro.core.stencil import make_engine
         is_block = kind.startswith(_BLOCK_KINDS_PREFIX)
         # the resolved k always becomes the engine's fusion depth on block
@@ -157,20 +170,28 @@ class BatchedRunner:
         # vmap path
         native = getattr(engine, "supports_native_batch", False)
 
+        def trace_tick():
+            """Runs only while tracing; cached calls skip it. Mirrored
+            onto the registry so retrace regressions are assertable per
+            (kind, workload, k) without a runner handle."""
+            stats.traces += 1
+            obs.inc("runner.trace", kind=kind, workload=workload.name,
+                    k=k)
+
         def traced_step(state):
-            stats.traces += 1  # runs only while tracing; cached calls skip it
+            trace_tick()
             return engine.step(state)
 
         def traced_step_k(state):
-            stats.traces += 1
+            trace_tick()
             return engine.step_k(state, k)
 
         def traced_batch_step(states):
-            stats.traces += 1
+            trace_tick()
             return engine.step_batched(states)
 
         def traced_batch_step_k(states):
-            stats.traces += 1
+            trace_tick()
             return engine.step_k_batched(states, k)
 
         batched_step = jax.jit(
@@ -203,6 +224,7 @@ class BatchedRunner:
         if len(self._cache) > self.capacity:
             self._cache.popitem(last=False)
             self.stats.evictions += 1
+            obs.inc("runner.cache.evict")
         return entry
 
     def engine_for(self, kind: str, frac: NBBFractal, r: int, m: int = 0,
@@ -266,10 +288,27 @@ class BatchedRunner:
         compiles once per distinct steps%k, bounded by k).
         ``donate=True`` hands the ``states`` buffer to XLA for in-place
         reuse — zero-copy steady-state stepping; the caller must not use
-        ``states`` afterwards."""
+        ``states`` afterwards.
+
+        With telemetry enabled, each call records a ``runner.run.seconds``
+        wall-time histogram sample (dispatch latency: time to hand the
+        work to XLA, not device completion on async backends) plus batch
+        size / step-count histograms, all labeled by ``kind``."""
+        t0 = time.perf_counter() if obs.enabled() else None
         entry = self._get(kind, frac, r, m, workload, k, mesh, axis)
         fn = entry.batched_run_donated if donate else entry.batched_run
-        return fn(states, jnp.asarray(steps, jnp.int32))
+        with obs.span("runner.run", kind=kind, steps=int(steps)):
+            out = fn(states, jnp.asarray(steps, jnp.int32))
+        if t0 is not None:
+            obs.observe("runner.run.seconds",
+                        time.perf_counter() - t0, kind=kind)
+            obs.observe("runner.batch_size", int(states.shape[0]),
+                        kind=kind)
+            obs.observe("runner.steps", int(steps), kind=kind)
+            obs.inc("runner.runs", kind=kind)
+            if donate:
+                obs.inc("runner.donated_runs", kind=kind)
+        return out
 
     def to_expanded(self, kind: str, frac: NBBFractal, r: int,
                     states: Array, m: int = 0,

@@ -1,0 +1,346 @@
+"""The telemetry layer (repro.obs) and its instrumentation hooks.
+
+Three tiers: (1) the registry / span / exporter primitives in
+isolation; (2) the wiring — runner cache counters, engine retrace
+detectors, distributed collective accounting unified with
+``exchange_stats()``, watchdog / restart / checkpoint counters; (3)
+the acceptance path: one ``BatchedRunner.run`` on a distributed-fused
+engine, then one ``obs.report()`` showing per-run latency histograms,
+fused-launch and collective counts, cache hit/miss and memory-bytes
+gauges (DESIGN.md Section 7).
+
+Every test runs against a reset default registry with collection
+forced on (and the ambient enabled/disabled state restored after) —
+except the explicitly-disabled tests, which assert the no-op contract.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import fractals
+from repro.core.compact import BlockLayout
+from repro.core.distributed import make_distributed_engine
+from repro.core.stencil import make_engine
+from repro.workloads.rules import HIGHLIFE, LIFE
+from repro.workloads.runner import BatchedRunner
+
+FRAC = fractals.SIERPINSKI
+
+
+@pytest.fixture
+def reg():
+    """Fresh default-registry state with telemetry ON; restores the
+    ambient enabled flag afterwards."""
+    prev = obs.enabled()
+    obs.enable(True)
+    obs.reset()
+    try:
+        yield obs.default_registry()
+    finally:
+        obs.reset()
+        obs.enable(prev)
+
+
+# ------------------------------------------------------------- registry
+def test_counter_gauge_histogram_semantics(reg):
+    c = reg.counter("c", kind="x")
+    c.inc()
+    c.inc(3)
+    assert reg.value("c", kind="x") == 4
+    # same (name, labels) -> the same metric object; new labels -> new
+    assert reg.counter("c", kind="x") is c
+    assert reg.counter("c", kind="y") is not c
+    g = reg.gauge("g")
+    g.set(7)
+    g.add(-2)
+    assert reg.value("g") == 5
+    h = reg.histogram("h")
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.record(v)
+    assert h.count == 4 and h.sum == 10.0
+    assert h.min == 1.0 and h.max == 4.0
+    assert reg.get("missing") is None and reg.value("missing") is None
+
+
+def test_type_collision_raises(reg):
+    reg.counter("m")
+    with pytest.raises(ValueError):
+        reg.gauge("m")
+
+
+def test_label_order_is_canonical(reg):
+    a = reg.counter("c", x=1, y=2)
+    b = reg.counter("c", y=2, x=1)
+    assert a is b
+
+
+def test_histogram_percentiles(reg):
+    h = reg.histogram("lat")
+    for v in range(1, 101):
+        h.record(float(v))
+    # bucketed estimate: right order of magnitude + clamped to range
+    assert h.percentile(0.0) == 1.0
+    assert h.percentile(1.0) == 100.0
+    assert 30.0 <= h.percentile(0.5) <= 70.0
+    assert h.percentile(0.95) <= 100.0
+
+
+def test_reset_zeros_in_place(reg):
+    c = reg.counter("c")
+    c.inc(5)
+    h = reg.histogram("h")
+    h.record(1.0)
+    reg.reset()
+    assert c.value == 0 and h.count == 0
+    c.inc()  # handles stay live after reset
+    assert reg.value("c") == 1
+
+
+# ------------------------------------------------------------ exporters
+def test_jsonl_round_trip(reg):
+    reg.counter("c", kind="x").inc(3)
+    reg.gauge("g").set(2.5)
+    h = reg.histogram("h", kind="x")
+    h.record(0.5)
+    h.record(4.0)
+    back = obs.load_jsonl(obs.to_jsonl(reg))
+    assert back.snapshot() == reg.snapshot()
+
+
+def test_prometheus_text(reg):
+    reg.counter("runner.cache.hit", kind="block").inc(2)
+    reg.histogram("runner.run.seconds").record(0.25)
+    text = obs.to_prometheus(reg)
+    assert 'squeeze_runner_cache_hit{kind="block"} 2' in text
+    assert "# TYPE squeeze_runner_run_seconds histogram" in text
+    assert 'squeeze_runner_run_seconds_bucket{le="+Inf"} 1' in text
+    assert "squeeze_runner_run_seconds_count 1" in text
+
+
+def test_report_table(reg):
+    reg.counter("c", kind="x").inc(2)
+    reg.histogram("h").record(1.0)
+    out = obs.report(reg)
+    assert "c{kind=x}" in out and "2" in out
+    assert "count=1" in out
+
+
+# ---------------------------------------------------------------- spans
+def test_span_nesting_and_chrome_trace(reg):
+    with obs.span("outer", kind="x"):
+        with obs.span("inner"):
+            pass
+    roots = obs.spans()
+    assert roots[-1].name == "outer"
+    assert [c.name for c in roots[-1].children] == ["inner"]
+    assert roots[-1].dur_us >= roots[-1].children[0].dur_us
+    events = obs.chrome_trace()["traceEvents"]
+    names = [e["name"] for e in events]
+    assert "outer" in names and "inner" in names
+    json.dumps(events)  # must be serializable as-is
+
+
+def test_timed_records_histogram(reg):
+    with obs.timed("t.seconds", kind="x"):
+        pass
+    assert reg.get("t.seconds", kind="x").count == 1
+
+
+# ------------------------------------------------------------- disabled
+def test_disabled_helpers_are_noops(reg):
+    # reset() zeroes in place but keeps handles alive, so assert no NEW
+    # metrics appear (the registry is process-wide across tests)
+    obs.enable(False)
+    obs.inc("noop.c")
+    obs.set_gauge("noop.g", 1)
+    obs.observe("noop.h", 1.0)
+    with obs.span("noop.s") as sp:
+        assert sp is None  # the shared null context
+    assert reg.get("noop.c") is None
+    assert reg.get("noop.g") is None
+    assert reg.get("noop.h") is None
+    assert obs.spans() == ()
+
+
+def test_enabled_scope_restores(reg):
+    obs.enable(False)
+    with obs.enabled_scope():
+        assert obs.enabled()
+        obs.inc("c")
+    assert not obs.enabled()
+    assert reg.value("c") == 1
+
+
+def test_parse_env():
+    for off in ("", "0", "off", "false", "no", "none", "OFF", None):
+        assert not obs.parse_env(off)
+    for on in ("1", "true", "yes", "on", "anything"):
+        assert obs.parse_env(on)
+
+
+# ------------------------------------------------------- runner wiring
+def test_runner_cache_counters(reg):
+    runner = BatchedRunner(capacity=1)
+    states = runner.init_batch("block", FRAC, 4, seeds=range(2), m=1,
+                               workload=LIFE)
+    runner.run("block", FRAC, 4, states, steps=2, m=1, workload=LIFE)
+    assert reg.value("runner.cache.miss", kind="block") == 1
+    assert reg.value("runner.cache.hit", kind="block") >= 1
+    # the runner resolves k=None to the heuristic before building
+    # (rho = 3^1 -> k = 2), and labels the build with the resolved k
+    assert reg.value("runner.build", kind="block", workload="life",
+                     k=2) == 1
+    assert reg.get("runner.run.seconds", kind="block").count == 1
+    assert reg.get("runner.batch_size", kind="block").max == 2.0
+    # capacity-1 cache: a second key evicts the first
+    runner.init_batch("cell", FRAC, 4, seeds=range(2), workload=LIFE)
+    assert reg.value("runner.cache.evict") == 1
+    # registry counters mirror RunnerStats exactly
+    assert runner.stats.evictions == 1
+    assert runner.stats.builds == 2
+
+
+def test_runner_trace_counter_matches_stats(reg):
+    runner = BatchedRunner()
+    states = runner.init_batch("block", FRAC, 4, seeds=range(2), m=1,
+                               workload=HIGHLIFE)
+    runner.run("block", FRAC, 4, states, steps=2, m=1, workload=HIGHLIFE)
+    runner.run("block", FRAC, 4, states, steps=3, m=1, workload=HIGHLIFE)
+    total = sum(m.value for m in reg.metrics()
+                if m.name == "runner.trace")
+    assert total == runner.stats.traces
+
+
+# ------------------------------------------------------- engine wiring
+def test_engine_retrace_counters_stay_constant(reg):
+    # unlikely config (highlife, block, r=3, m=1) so earlier tests in
+    # the process haven't already populated jit caches for it; the
+    # invariant asserted is *constancy* across dynamic step counts, not
+    # an absolute trace count
+    eng = make_engine("block", FRAC, 3, 1, workload=HIGHLIFE)
+    s = eng.init_random(seed=0)
+    eng.run(s, 4)
+    key = dict(engine=type(eng).__name__, fn="run")
+    traces = reg.value("engine.trace", **key)
+    launches = reg.value("engine.runs", engine=type(eng).__name__,
+                         variant=getattr(eng, "variant", ""))
+    eng.run(s, 7)
+    eng.run(s, 2)
+    assert reg.value("engine.trace", **key) == traces  # no retrace
+    assert reg.value("engine.runs", engine=type(eng).__name__,
+                     variant=getattr(eng, "variant", "")) == launches + 2
+
+
+def test_engine_build_and_memory_gauge(reg):
+    make_engine("block", FRAC, 4, 2, workload=LIFE)
+    assert reg.value("engine.builds", kind="block") == 1
+    assert reg.value("engine.memory_bytes", kind="block") > 0
+
+
+def test_fused_launch_accounting(reg):
+    eng = make_engine("block", FRAC, 4, 2, workload=LIFE, fusion_k=3)
+    s = eng.init_random(seed=0)
+    eng.run(s, 7)  # 2 fused launches of 3 + 1 single step
+    labels = dict(engine=type(eng).__name__,
+                  variant=getattr(eng, "variant", ""))
+    assert reg.value("engine.fused_launches", **labels) == 2
+    assert reg.value("engine.single_steps", **labels) == 1
+    assert reg.value("engine.steps", **labels) == 7
+
+
+# -------------------------------------------------- distributed wiring
+def test_distributed_collectives_match_exchange_stats(reg):
+    eng = make_distributed_engine(BlockLayout(FRAC, 5, 2), workload=LIFE,
+                                  compute="fused", fusion_k=2)
+    s = eng.init_random(0)
+    eng.run(s, 5)  # ceil(5/2) = 3 exchange rounds
+    st = eng.exchange_stats()
+    assert st.collectives == 3
+    assert reg.value("dist.collectives", compute="fused") == \
+        st.collectives
+    assert reg.value("dist.bytes_gathered", compute="fused") == \
+        st.bytes_gathered
+    assert reg.value("dist.steps", compute="fused") == st.steps == 5
+
+
+# ----------------------------------------------------- acceptance path
+def test_end_to_end_report_on_distributed_fused(reg):
+    runner = BatchedRunner()
+    states = runner.init_batch("dist-fused", FRAC, 5, seeds=range(2),
+                               m=2, workload=LIFE)
+    out = runner.run("dist-fused", FRAC, 5, states, steps=5, m=2,
+                     workload=LIFE)
+    assert np.asarray(out).shape == np.asarray(states).shape
+    # per-run latency histogram
+    h = reg.get("runner.run.seconds", kind="dist-fused")
+    assert h is not None and h.count == 1 and h.sum > 0
+    # cache hit/miss (init_batch missed once, run hit)
+    assert reg.value("runner.cache.miss", kind="dist-fused") == 1
+    assert reg.value("runner.cache.hit", kind="dist-fused") >= 1
+    # fused launches + collectives on the distributed engine
+    assert reg.value("engine.fused_launches",
+                     engine="DistributedSqueezeEngine",
+                     variant="fused") >= 1
+    assert reg.value("dist.collectives", compute="fused") >= 1
+    # memory gauge from the build
+    assert reg.value("engine.memory_bytes", kind="dist-fused") > 0
+    # ...and all of it shows in one report() / JSONL export
+    text = obs.report(reg)
+    for needle in ("runner.run.seconds", "runner.cache.hit",
+                   "engine.fused_launches", "dist.collectives",
+                   "engine.memory_bytes"):
+        assert needle in text, f"report missing {needle}\n{text}"
+    back = obs.load_jsonl(obs.to_jsonl(reg))
+    assert back.value("dist.collectives", compute="fused") == \
+        reg.value("dist.collectives", compute="fused")
+
+
+# ------------------------------------------------- fault + checkpoint
+def test_watchdog_uses_registry_histogram(reg):
+    from repro.runtime.fault import Watchdog
+    wd = Watchdog(straggler_factor=3.0, min_samples=3)
+    for _ in range(6):
+        wd.start_step()
+        wd.end_step()
+    assert wd.histogram.count == 6
+    assert wd.median >= 0.0
+    assert reg.get("watchdog.step_seconds", watchdog=wd.name).count == 6
+
+
+def test_watchdog_instances_do_not_share_samples(reg):
+    from repro.runtime.fault import Watchdog
+    a, b = Watchdog(), Watchdog()
+    a.start_step()
+    a.end_step()
+    assert a.name != b.name
+    assert a.histogram.count == 1
+    assert b.histogram.count == 0
+
+
+def test_run_with_restarts_counts_on_registry(reg):
+    from repro.runtime.fault import SimulatedFailure, run_with_restarts
+    calls = {"n": 0}
+
+    def make_run():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise SimulatedFailure("boom")
+        return 42
+
+    assert run_with_restarts(make_run, max_restarts=3) == 42
+    assert reg.value("fault.restarts") == 2
+
+
+def test_checkpoint_counters(reg, tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path / "ck"))
+    tree = {"w": np.arange(8, dtype=np.float32)}
+    mgr.save(3, tree)
+    mgr.restore(tree)
+    assert reg.value("checkpoint.saves") == 1
+    assert reg.value("checkpoint.restores") == 1
+    assert reg.value("checkpoint.bytes") == 32
+    assert reg.get("checkpoint.save_seconds").count == 1
+    assert reg.get("checkpoint.restore_seconds").count == 1
