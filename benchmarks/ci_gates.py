@@ -116,6 +116,10 @@ def _summ_telemetry(data):
     return dict(data["gate"])
 
 
+def _summ_serve(data):
+    return dict(data["gate"])
+
+
 #: gate name -> spec. Thresholds and output paths live HERE, not in the
 #: workflow and not in bench defaults. ``threshold`` is the number the
 #: bench gate compares against (None: correctness/parity-only gate);
@@ -176,6 +180,18 @@ GATES = {
               "--telemetry-out", "BENCH_telemetry.json"],
         env={}, out="BENCH_telemetry.json", threshold=2.0,
         summarize=_summ_telemetry, no_telemetry_env=True),
+    # continuous batching vs per-request serving (same service
+    # machinery, max_batch=1) — batched must not lose; plus the chaos
+    # phase: injected crash + corrupt checkpoint must recover bit-exact
+    # within the wall-time bound. The bench drives its own
+    # enabled_scope registry, so no SQUEEZE_TELEMETRY needed (the dump
+    # env is still honored for the artifact snapshot).
+    "serve": dict(
+        script="serve_bench.py",
+        args=["--min-speedup", "1.0", "--max-recovery-s", "10.0",
+              "--out", "BENCH_serve.json"],
+        env={}, out="BENCH_serve.json", threshold=1.0,
+        summarize=_summ_serve),
 }
 
 

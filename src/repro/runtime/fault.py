@@ -1,34 +1,47 @@
-"""Fault-tolerance runtime: step watchdog (straggler detection), preemption
-handling, and a restart supervisor.
+"""Fault-tolerance runtime: step watchdog (straggler + hang detection),
+preemption handling, a restart supervisor with backoff, and the chaos
+harness that proves all of it works.
 
 At 1000+ nodes the failure model is: frequent single-host preemptions
 (handled by checkpoint/restart — the supervisor here), slow hosts
-(watchdog surfaces p95 outliers so the scheduler can cordon them), and
-rare corrupt saves (prevented by the manager's atomic rename protocol).
+(watchdog surfaces p95 outliers so the scheduler can cordon them), hung
+kernels (watchdog hang threshold -> engine restart), and rare corrupt
+saves (caught by the manager's per-leaf checksums, which fall back to
+the previous intact step). ``FaultInjector`` turns each of those
+failure classes into a *scriptable* event so the serving layer
+(``repro.serving``) can be exercised against the full chaos matrix in
+CI — see DESIGN.md Section 8.
 
 Accounting lives on the telemetry registry (``repro.obs``): the
 watchdog's step times land in a ``watchdog.step_seconds`` histogram
 (one labeled series per watchdog — the bespoke ring buffer of samples
-is gone), straggler fires count ``watchdog.stragglers``, and the
-restart supervisor counts ``fault.restarts``. These record regardless
-of the ``SQUEEZE_TELEMETRY`` toggle: constructing a watchdog or a
-supervisor IS the opt-in, and both are control-flow state (the
-straggler median and the give-up bound read them back), not optional
-telemetry.
+is gone), straggler fires count ``watchdog.stragglers``, hang fires
+count ``watchdog.hangs``, and the restart supervisor counts
+``fault.restarts``. These record regardless of the
+``SQUEEZE_TELEMETRY`` toggle: constructing a watchdog or a supervisor
+IS the opt-in, and both are control-flow state (the straggler median
+and the give-up bound read them back), not optional telemetry.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import os
+import random
 import signal
 import time
-from typing import Callable, Optional
+from typing import Callable, Iterator, List, Optional, Sequence, Tuple
 
 from repro.obs import Histogram, default_registry
 
 
 class SimulatedFailure(RuntimeError):
     """Raised by tests / chaos hooks to emulate a mid-run crash."""
+
+
+class InjectedFault(SimulatedFailure):
+    """A fault raised by :class:`FaultInjector` (transient by contract:
+    supervisors retry it)."""
 
 
 #: distinct default label per Watchdog instance, so two watchdogs (e.g.
@@ -39,19 +52,30 @@ _WD_IDS = itertools.count()
 
 @dataclasses.dataclass
 class Watchdog:
-    """Tracks step wall-times; flags stragglers beyond k x median.
+    """Tracks step wall-times; flags stragglers beyond k x median and
+    carries the hang threshold a supervisor enforces.
 
     Samples live in the ``watchdog.step_seconds`` histogram on the
     default registry (``.histogram`` — exported by obs.report(), JSONL
     and Prometheus like every other metric); the straggler threshold
     uses its bucket-interpolated p50. ``name`` labels the series
     (default: a fresh ``wd<N>`` per instance).
+
+    Stragglers are detected *post hoc* (the step returned, just
+    slowly). A hang never returns, so it cannot be detected here — the
+    supervisor must bound the step's wall time externally
+    (``asyncio.wait_for`` in the serving layer) using
+    ``hang_threshold_s`` and report the kill via :meth:`flag_hang`.
     """
     straggler_factor: float = 3.0
     name: Optional[str] = None
     min_samples: int = 5
+    #: wall-time bound a supervisor applies to one step/segment; None
+    #: disables hang detection (nothing in this class sleeps or waits)
+    hang_threshold_s: Optional[float] = None
     _t0: Optional[float] = None
     stragglers: int = 0
+    hangs: int = 0
 
     def __post_init__(self):
         if self.name is None:
@@ -77,22 +101,61 @@ class Watchdog:
                                        watchdog=self.name).inc()
         return dt
 
+    def flag_hang(self) -> None:
+        """Record a supervisor-detected hang (the step exceeded
+        ``hang_threshold_s`` and was abandoned/killed)."""
+        self.hangs += 1
+        default_registry().counter("watchdog.hangs",
+                                   watchdog=self.name).inc()
+
     @property
     def median(self) -> float:
         return self.histogram.percentile(0.5)
 
 
 class PreemptionHandler:
-    """SIGTERM -> request a final checkpoint and a clean exit."""
+    """SIGTERM -> request a final checkpoint and a clean exit.
+
+    Installing replaces the process's SIGTERM/SIGUSR1 handlers; the
+    originals are kept and restored by :meth:`uninstall` (also the
+    context-manager exit), so a scoped handler — one serve() call, one
+    test — cannot leak its trap into the rest of the process.
+    """
+
+    _SIGNALS = (signal.SIGTERM, signal.SIGUSR1)
 
     def __init__(self, install: bool = True):
         self.requested = False
+        self._previous: List[Tuple[int, object]] = []
         if install:
+            self.install()
+
+    def install(self) -> None:
+        if self._previous:
+            return  # already installed
+        for sig in self._SIGNALS:
             try:
-                signal.signal(signal.SIGTERM, self._handler)
-                signal.signal(signal.SIGUSR1, self._handler)
+                prev = signal.signal(sig, self._handler)
             except ValueError:
-                pass  # not the main thread (tests)
+                break  # not the main thread (tests)
+            self._previous.append((sig, prev))
+
+    def uninstall(self) -> None:
+        """Restore the signal handlers that were active before
+        :meth:`install` (no-op if never installed)."""
+        while self._previous:
+            sig, prev = self._previous.pop()
+            try:
+                signal.signal(sig, prev)
+            except (ValueError, TypeError):
+                pass
+
+    def __enter__(self) -> "PreemptionHandler":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.uninstall()
+        return False
 
     def _handler(self, signum, frame):
         self.requested = True
@@ -101,8 +164,31 @@ class PreemptionHandler:
         self.requested = True
 
 
-def run_with_restarts(make_run: Callable[[], int], max_restarts: int = 3
-                      ) -> int:
+# --------------------------------------------------------------- backoff
+def backoff_delays(base_s: float = 0.05, cap_s: float = 1.0,
+                   factor: float = 2.0, seed: int = 0
+                   ) -> Iterator[float]:
+    """Exponential backoff with deterministic full jitter.
+
+    Yields ``uniform(base/2, base) * factor**attempt`` capped at
+    ``cap_s``, from a private ``random.Random(seed)`` — two supervisors
+    with the same seed sleep the same schedule (testable), two with
+    different seeds decorrelate (no thundering-herd retry alignment).
+    """
+    rng = random.Random(seed)
+    attempt = 0
+    while True:
+        raw = min(cap_s, base_s * (factor ** attempt))
+        yield raw * (0.5 + 0.5 * rng.random())
+        attempt += 1
+
+
+def run_with_restarts(make_run: Callable[[], int], max_restarts: int = 3,
+                      backoff_base_s: float = 0.05,
+                      backoff_cap_s: float = 1.0,
+                      backoff_seed: int = 0,
+                      max_elapsed_s: Optional[float] = None,
+                      _sleep: Callable[[float], None] = time.sleep) -> int:
     """Supervisor: call ``make_run`` (which resumes from the latest
     checkpoint internally) until it returns, restarting on failures.
 
@@ -110,12 +196,23 @@ def run_with_restarts(make_run: Callable[[], int], max_restarts: int = 3
     checkpoint — with the stateless data pipeline and bit-exact restore
     this makes the whole trajectory restart-invariant (tested).
 
+    Each restart sleeps an exponentially growing, deterministically
+    jittered delay (:func:`backoff_delays`; ``backoff_base_s=0``
+    restarts immediately). Gives up — re-raising the failure — after
+    ``max_restarts`` restarts or once ``max_elapsed_s`` of wall time
+    has passed (whichever comes first), so a crash-looping job cannot
+    hold its resources forever.
+
     Restarts count on the default registry's ``fault.restarts`` counter
     (the process-lifetime total a supervisor dashboard wants); the
     per-invocation give-up bound is the delta against the counter value
-    at entry."""
+    at entry. ``_sleep`` is injectable so tests can assert the delay
+    schedule without waiting it out."""
     counter = default_registry().counter("fault.restarts")
     start = counter.value
+    t0 = time.monotonic()
+    delays = backoff_delays(backoff_base_s, backoff_cap_s,
+                            seed=backoff_seed)
     while True:
         try:
             return make_run()
@@ -123,3 +220,149 @@ def run_with_restarts(make_run: Callable[[], int], max_restarts: int = 3
             counter.inc()
             if counter.value - start > max_restarts:
                 raise
+            if (max_elapsed_s is not None
+                    and time.monotonic() - t0 >= max_elapsed_s):
+                raise
+            delay = next(delays)
+            if delay > 0:
+                _sleep(delay)
+
+
+# --------------------------------------------------------- chaos harness
+@dataclasses.dataclass
+class Fault:
+    """One scheduled fault. ``at_segment`` indexes the service's global
+    segment counter (every batched launch across all buckets advances
+    it), so a chaos plan is reproducible run to run.
+
+    kind:
+      * ``exception``  — raise :class:`InjectedFault` in the worker
+        thread right before the segment's XLA dispatch (the in-step
+        crash class);
+      * ``stall``      — sleep ``stall_s`` in the worker thread (past
+        the watchdog hang threshold -> supervisor kills + restarts the
+        engine);
+      * ``preempt``    — deliver SIGTERM (``via_signal=True``, needs an
+        installed handler) or call ``handler.request()`` directly: the
+        service drains in-flight batches, checkpoints, sheds the rest;
+      * ``corrupt``    — flip bytes in the newest checkpoint leaf of
+        ``target_rid`` (or the next checkpoint saved) so the next
+        restore must fall back to the previous intact step;
+      * ``truncate``   — same, but truncate the leaf file instead.
+    """
+
+    kind: str
+    at_segment: int = 0
+    stall_s: float = 0.0
+    via_signal: bool = False
+    target_rid: Optional[str] = None
+    fired: bool = False
+
+    _KINDS = ("exception", "stall", "preempt", "corrupt", "truncate")
+
+    def __post_init__(self):
+        if self.kind not in self._KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {self._KINDS}")
+
+
+class FaultInjector:
+    """Chaos harness: a scripted plan of :class:`Fault`\\ s fired at the
+    serving layer's hook points.
+
+    The service calls three hooks:
+
+      * :meth:`in_step` — from the WORKER thread, immediately before a
+        segment's dispatch (exception / stall fire here, so a stall
+        really does block the step the watchdog is timing);
+      * :meth:`at_boundary` — from the scheduler, between segments
+        (preempt fires here; a real SIGTERM round-trips through the
+        installed :class:`PreemptionHandler`);
+      * :meth:`on_checkpoint` — after every durable checkpoint save
+        (corrupt / truncate damage the just-written files on disk).
+
+    Every fired fault appends ``(segment, kind, detail)`` to ``.log``
+    and counts ``chaos.injected{kind=...}`` on the default registry, so
+    a chaos run's injected-vs-recovered arithmetic is checkable from
+    telemetry alone.
+    """
+
+    def __init__(self, faults: Sequence[Fault] = (),
+                 handler: Optional[PreemptionHandler] = None):
+        self.faults = list(faults)
+        self.handler = handler
+        self.log: List[Tuple[int, str, str]] = []
+
+    def _fire(self, fault: Fault, segment: int, detail: str = "") -> None:
+        fault.fired = True
+        self.log.append((segment, fault.kind, detail))
+        default_registry().counter("chaos.injected",
+                                   kind=fault.kind).inc()
+
+    def _due(self, segment: int, kinds: Tuple[str, ...]) -> List[Fault]:
+        return [f for f in self.faults
+                if not f.fired and f.kind in kinds
+                and f.at_segment <= segment]
+
+    # ------------------------------------------------------------- hooks
+    def in_step(self, segment: int) -> None:
+        """Worker-thread hook, right before the segment's dispatch."""
+        for f in self._due(segment, ("stall",)):
+            self._fire(f, segment, f"stall {f.stall_s}s")
+            time.sleep(f.stall_s)
+        for f in self._due(segment, ("exception",)):
+            self._fire(f, segment, "raise")
+            raise InjectedFault(
+                f"injected in-step failure at segment {segment}")
+
+    def at_boundary(self, segment: int) -> None:
+        """Scheduler hook, between segments (main thread)."""
+        for f in self._due(segment, ("preempt",)):
+            self._fire(f, segment,
+                       "SIGTERM" if f.via_signal else "request()")
+            if f.via_signal:
+                os.kill(os.getpid(), signal.SIGTERM)
+            elif self.handler is not None:
+                self.handler.request()
+            else:
+                raise RuntimeError(
+                    "preempt fault needs via_signal=True or a handler")
+
+    def on_checkpoint(self, rid: str, path: str, segment: int = 0) -> None:
+        """Post-save hook: damage the files of the checkpoint at
+        ``path`` (a ``step_XXXXXXXX`` directory)."""
+        for f in self._due(segment, ("corrupt", "truncate")):
+            if f.target_rid is not None and f.target_rid != rid:
+                continue
+            n = damage_checkpoint(path, mode=f.kind)
+            self._fire(f, segment, f"{f.kind} {n} file(s) in {path}")
+
+    # ----------------------------------------------------------- queries
+    def pending(self) -> List[Fault]:
+        return [f for f in self.faults if not f.fired]
+
+    def all_fired(self) -> bool:
+        return not self.pending()
+
+
+def damage_checkpoint(path: str, mode: str = "corrupt") -> int:
+    """Corrupt (bit-flip) or truncate every ``.npy`` leaf under the
+    checkpoint directory ``path``. Returns the number of files damaged.
+    Used by the chaos harness and directly by tests."""
+    damaged = 0
+    for fn in sorted(os.listdir(path)):
+        if not fn.endswith(".npy"):
+            continue
+        fp = os.path.join(path, fn)
+        if mode == "truncate":
+            size = os.path.getsize(fp)
+            with open(fp, "r+b") as f:
+                f.truncate(max(0, size // 2))
+        else:
+            with open(fp, "r+b") as f:
+                f.seek(-1, os.SEEK_END)
+                last = f.read(1)
+                f.seek(-1, os.SEEK_END)
+                f.write(bytes([last[0] ^ 0xFF]))
+        damaged += 1
+    return damaged

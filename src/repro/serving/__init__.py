@@ -1,0 +1,14 @@
+"""Fault-tolerant continuous-batching fractal-simulation serving.
+
+Public surface::
+
+    from repro.serving import (FractalService, ServiceConfig, SimRequest,
+                               SimResult, AdmissionError)
+    from repro.runtime.fault import Fault, FaultInjector   # chaos harness
+
+See DESIGN.md Section 8 for the architecture, the chaos matrix and the
+recovery state machine.
+"""
+from repro.serving.service import FractalService  # noqa: F401
+from repro.serving.types import (  # noqa: F401
+    AdmissionError, CircuitBreaker, ServiceConfig, SimRequest, SimResult)

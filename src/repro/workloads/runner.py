@@ -42,9 +42,10 @@ See DESIGN.md Section 3.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import OrderedDict
-from typing import TYPE_CHECKING, Hashable, Optional, Tuple
+from typing import TYPE_CHECKING, Dict, Hashable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -101,6 +102,14 @@ class _Entry:
 
 class BatchedRunner:
     """LRU cache of compiled batched engines over (kind, frac, r, m, wl, k).
+
+    Thread-safe: the serving layer (``repro.serving``) drives one runner
+    from many worker threads, including abandoned hang threads that may
+    race a fresh retry. Cache lookups/inserts/evictions hold an RLock;
+    a cold build runs *outside* the lock behind a per-key build event,
+    so (a) concurrent misses on the same key build the engine exactly
+    once (the losers wait, then take the cache hit) and (b) a
+    multi-second trace never blocks warm hits on other keys.
     """
 
     def __init__(self, capacity: int = 16):
@@ -109,6 +118,8 @@ class BatchedRunner:
         self.capacity = capacity
         self.stats = RunnerStats()
         self._cache: "OrderedDict[Key, _Entry]" = OrderedDict()
+        self._lock = threading.RLock()
+        self._building: Dict[Key, threading.Event] = {}
 
     # ------------------------------------------------------------- cache
     def _resolve_k(self, kind: str, frac: NBBFractal, m: int,
@@ -125,20 +136,48 @@ class BatchedRunner:
             return default_fusion_k(frac.s ** m)
         return k
 
-    def _get(self, kind: str, frac: NBBFractal, r: int, m: int,
-             workload: StencilWorkload, k: Optional[int] = None,
-             mesh=None, axis: str = "data") -> _Entry:
+    def _resolve_key(self, kind: str, frac: NBBFractal, r: int, m: int,
+                     workload: StencilWorkload, k: Optional[int] = None,
+                     mesh=None, axis: str = "data") -> Key:
+        """The normalized cache identity of one configuration."""
         if kind == "pallas":  # make_engine's alias; one cache slot, not two
             kind = "pallas-strips"
         k = self._resolve_k(kind, frac, m, k)
         if not _is_dist(kind):
             mesh = None  # placement-only for non-dist kinds; one slot
-        key: Key = (kind, frac, r, m, workload, k, mesh, axis)
-        entry = self._cache.get(key)
-        if entry is not None:
-            self._cache.move_to_end(key)
-            obs.inc("runner.cache.hit", kind=kind)
-            return entry
+        return (kind, frac, r, m, workload, k, mesh, axis)
+
+    def _get(self, kind: str, frac: NBBFractal, r: int, m: int,
+             workload: StencilWorkload, k: Optional[int] = None,
+             mesh=None, axis: str = "data") -> _Entry:
+        key = self._resolve_key(kind, frac, r, m, workload, k, mesh, axis)
+        kind, _, _, _, _, k, mesh, axis = key
+        while True:
+            with self._lock:
+                entry = self._cache.get(key)
+                if entry is not None:
+                    self._cache.move_to_end(key)
+                    obs.inc("runner.cache.hit", kind=kind)
+                    return entry
+                ev = self._building.get(key)
+                if ev is None:
+                    # we build; racing threads wait on the event, then
+                    # re-check the cache (or, if we failed/were evicted
+                    # already, one of them becomes the next builder)
+                    self._building[key] = threading.Event()
+                    break
+            ev.wait()
+        try:
+            entry = self._build(key)
+            return self._insert(key, entry)
+        finally:
+            with self._lock:
+                self._building.pop(key).set()
+
+    def _build(self, key: Key) -> _Entry:
+        """Construct + wrap the engine for ``key`` (no lock held: engine
+        construction and jax tracing can take seconds)."""
+        kind, frac, r, m, workload, k, mesh, axis = key
         obs.inc("runner.cache.miss", kind=kind)
         obs.inc("runner.build", kind=kind, workload=workload.name, k=k)
         from repro.core.stencil import make_engine
@@ -155,12 +194,11 @@ class BatchedRunner:
             # the Python-side collective counters would only run at trace
             # time. Its step/run handle (B, C?, nb_padded, rho, rho)
             # natively (one batched strip all-gather per launch).
-            entry = _Entry(engine, engine.step_batched,
-                           lambda states, steps: engine.run(
-                               states, int(steps)),
-                           lambda states, steps: engine.run(
-                               states, int(steps), donate=True))
-            return self._insert(key, entry)
+            return _Entry(engine, engine.step_batched,
+                          lambda states, steps: engine.run(
+                              states, int(steps)),
+                          lambda states, steps: engine.run(
+                              states, int(steps), donate=True))
         fused = is_block and k > 1
         stats = self.stats
         # the v5 'mxu' engine advances the whole batch through ONE kernel
@@ -213,19 +251,45 @@ class BatchedRunner:
             # XLA step_k tables, outside traces; the pallas kinds build
             # their (smaller) v4 set in the kernel entry point
             engine.layout.materialize_halo(k)
-        return self._insert(key, _Entry(engine, batched_step,
-                                        jax.jit(_run),
-                                        jax.jit(_run, donate_argnums=0)))
+        return _Entry(engine, batched_step, jax.jit(_run),
+                      jax.jit(_run, donate_argnums=0))
 
     def _insert(self, key: Key, entry: _Entry) -> _Entry:
         """Shared cache insert + build accounting + LRU eviction."""
-        self._cache[key] = entry
-        self.stats.builds += 1
-        if len(self._cache) > self.capacity:
-            self._cache.popitem(last=False)
-            self.stats.evictions += 1
-            obs.inc("runner.cache.evict")
+        with self._lock:
+            self._cache[key] = entry
+            self.stats.builds += 1
+            if len(self._cache) > self.capacity:
+                self._cache.popitem(last=False)
+                self.stats.evictions += 1
+                obs.inc("runner.cache.evict")
         return entry
+
+    def is_cached(self, kind: str, frac: NBBFractal, r: int, m: int = 0,
+                  workload: StencilWorkload = LIFE,
+                  k: Optional[int] = None, mesh=None,
+                  axis: str = "data") -> bool:
+        """Whether this configuration is a warm cache hit right now
+        (no build, no LRU touch) — the serving layer's admission
+        control uses this to bound concurrent cold compiles."""
+        key = self._resolve_key(kind, frac, r, m, workload, k, mesh, axis)
+        with self._lock:
+            return key in self._cache
+
+    def invalidate(self, kind: str, frac: NBBFractal, r: int, m: int = 0,
+                   workload: StencilWorkload = LIFE,
+                   k: Optional[int] = None, mesh=None,
+                   axis: str = "data") -> bool:
+        """Drop one compiled entry (if cached): the serving layer's
+        engine-restart path after a watchdog-detected hang — the next
+        ``run`` rebuilds from scratch. Returns True if an entry was
+        evicted."""
+        key = self._resolve_key(kind, frac, r, m, workload, k, mesh, axis)
+        with self._lock:
+            entry = self._cache.pop(key, None)
+            if entry is not None:
+                obs.inc("runner.cache.invalidate", kind=key[0])
+            return entry is not None
 
     def engine_for(self, kind: str, frac: NBBFractal, r: int, m: int = 0,
                    workload: StencilWorkload = LIFE,

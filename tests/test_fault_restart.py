@@ -99,6 +99,87 @@ def test_supervisor_gives_up_after_max_restarts():
         run_with_restarts(always_fails, max_restarts=2)
 
 
+def test_backoff_delays_deterministic_jittered_capped():
+    import itertools
+
+    from repro.runtime.fault import backoff_delays
+    a = list(itertools.islice(
+        backoff_delays(base_s=0.1, cap_s=0.5, seed=7), 8))
+    b = list(itertools.islice(
+        backoff_delays(base_s=0.1, cap_s=0.5, seed=7), 8))
+    assert a == b  # same seed, same schedule
+    c = list(itertools.islice(
+        backoff_delays(base_s=0.1, cap_s=0.5, seed=8), 8))
+    assert a != c  # different seed decorrelates
+    # full jitter stays within [raw/2, raw], raw capped at cap_s
+    for i, d in enumerate(a):
+        raw = min(0.5, 0.1 * 2 ** i)
+        assert raw / 2 <= d <= raw
+    assert max(a) <= 0.5
+
+
+def test_run_with_restarts_sleeps_backoff_schedule():
+    from repro.runtime.fault import backoff_delays
+    calls = {"n": 0}
+    slept = []
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] <= 3:
+            raise SimulatedFailure("transient")
+        return 99
+
+    out = run_with_restarts(flaky, max_restarts=5, backoff_base_s=0.05,
+                            backoff_cap_s=1.0, backoff_seed=11,
+                            _sleep=slept.append)
+    assert out == 99
+    import itertools
+    want = list(itertools.islice(
+        backoff_delays(base_s=0.05, cap_s=1.0, seed=11), 3))
+    assert slept == want  # the documented deterministic schedule
+
+
+def test_run_with_restarts_wall_clock_give_up():
+    slept = []
+
+    def always_fails():
+        raise SimulatedFailure("boom")
+
+    with pytest.raises(SimulatedFailure):
+        run_with_restarts(always_fails, max_restarts=10 ** 6,
+                          max_elapsed_s=0.0, _sleep=slept.append)
+    assert slept == []  # gave up before the first backoff sleep
+
+
+def test_preemption_handler_restores_prior_handler():
+    import signal
+
+    def custom(signum, frame):  # pragma: no cover - never delivered
+        pass
+
+    prev = signal.signal(signal.SIGTERM, custom)
+    try:
+        h = PreemptionHandler()  # installs over `custom`
+        assert signal.getsignal(signal.SIGTERM) == h._handler
+        import os
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert h.requested
+        h.uninstall()
+        assert signal.getsignal(signal.SIGTERM) == custom
+        h.uninstall()  # idempotent
+        assert signal.getsignal(signal.SIGTERM) == custom
+    finally:
+        signal.signal(signal.SIGTERM, prev)
+
+
+def test_preemption_handler_context_manager_uninstalls():
+    import signal
+    before = signal.getsignal(signal.SIGTERM)
+    with PreemptionHandler() as h:
+        assert signal.getsignal(signal.SIGTERM) == h._handler
+    assert signal.getsignal(signal.SIGTERM) == before
+
+
 def test_watchdog_flags_stragglers():
     import time
     wd = Watchdog(straggler_factor=3.0)

@@ -1,0 +1,166 @@
+"""BatchedRunner cache behaviour under concurrent access: the serving
+layer drives one runner from several worker threads (including
+abandoned hang threads racing a fresh retry), so the LRU must stay
+consistent — build-once on concurrent miss, sane eviction accounting,
+no lost or duplicated entries."""
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import fractals
+from repro.workloads import LIFE, BatchedRunner
+
+FRAC = fractals.SIERPINSKI
+
+
+def _touch(runner, r):
+    return runner.engine_for("block", FRAC, r, m=1)
+
+
+def test_concurrent_miss_builds_once():
+    """Eight threads miss the same cold key simultaneously; exactly one
+    builds, the rest wait on the build event and take the hit."""
+    runner = BatchedRunner(capacity=4)
+    gate = threading.Barrier(8)
+
+    def hit():
+        gate.wait()
+        return _touch(runner, 4)
+
+    with ThreadPoolExecutor(max_workers=8) as ex:
+        engines = [f.result() for f in
+                   [ex.submit(hit) for _ in range(8)]]
+    assert runner.stats.builds == 1
+    assert all(e is engines[0] for e in engines)
+    assert runner.cache_size() == 1
+
+
+def test_concurrent_distinct_keys_all_cached():
+    runner = BatchedRunner(capacity=8)
+    rs = [3, 4, 5]
+    with ThreadPoolExecutor(max_workers=len(rs)) as ex:
+        list(ex.map(lambda r: _touch(runner, r), rs))
+    assert runner.stats.builds == len(rs)
+    assert runner.cache_size() == len(rs)
+    assert all(runner.is_cached("block", FRAC, r, m=1) for r in rs)
+
+
+def test_eviction_under_concurrent_access():
+    """Hammer a capacity-2 cache with 4 keys from 8 threads: counters
+    must balance (entries = builds - evictions) and every engine the
+    threads got back must still run correctly."""
+    runner = BatchedRunner(capacity=2)
+    rs = [3, 4, 5, 6]
+    stop = threading.Event()
+    errs = []
+
+    def churn(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            while not stop.is_set():
+                _touch(runner, int(rng.choice(rs)))
+        except Exception as e:  # pragma: no cover - failure reporting
+            errs.append(e)
+
+    threads = [threading.Thread(target=churn, args=(i,))
+               for i in range(8)]
+    for t in threads:
+        t.start()
+    # let every key build at least once, then stop
+    deadline = threading.Event()
+    deadline.wait(1.0)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert runner.cache_size() <= 2
+    assert runner.stats.builds >= len(rs)  # misses forced rebuilds
+    assert (runner.stats.builds - runner.stats.evictions
+            == runner.cache_size())
+
+
+def test_evict_counter_telemetry():
+    with obs.enabled_scope(True) as reg:
+        obs.reset()
+        runner = BatchedRunner(capacity=1)
+        _touch(runner, 3)
+        _touch(runner, 4)  # evicts r=3
+        _touch(runner, 3)  # evicts r=4, rebuilds r=3
+        assert runner.stats.evictions == 2
+        assert reg.counter("runner.cache.evict").value == 2
+        assert reg.counter("runner.cache.hit", kind="block").value == 0
+        _touch(runner, 3)
+        assert reg.counter("runner.cache.hit", kind="block").value == 1
+
+
+def test_lru_evicts_least_recently_used():
+    runner = BatchedRunner(capacity=2)
+    _touch(runner, 3)
+    _touch(runner, 4)
+    _touch(runner, 3)  # refresh r=3 -> r=4 is now LRU
+    _touch(runner, 5)  # evicts r=4
+    assert runner.is_cached("block", FRAC, 3, m=1)
+    assert not runner.is_cached("block", FRAC, 4, m=1)
+    assert runner.is_cached("block", FRAC, 5, m=1)
+
+
+def test_is_cached_does_not_touch_lru_order():
+    runner = BatchedRunner(capacity=2)
+    _touch(runner, 3)
+    _touch(runner, 4)
+    assert runner.is_cached("block", FRAC, 3, m=1)  # a peek, not a use
+    _touch(runner, 5)  # must evict r=3 (peek didn't refresh it)
+    assert not runner.is_cached("block", FRAC, 3, m=1)
+    assert runner.is_cached("block", FRAC, 4, m=1)
+
+
+def test_invalidate_forces_rebuild():
+    runner = BatchedRunner(capacity=4)
+    e1 = _touch(runner, 4)
+    assert runner.invalidate("block", FRAC, 4, m=1)
+    assert not runner.is_cached("block", FRAC, 4, m=1)
+    assert not runner.invalidate("block", FRAC, 4, m=1)  # already gone
+    e2 = _touch(runner, 4)
+    assert e2 is not e1
+    assert runner.stats.builds == 2
+
+
+def test_invalidated_engine_still_usable_by_old_holder():
+    """A thread holding an engine across an invalidation (the abandoned
+    hang-thread case) can still run it; results stay bit-exact with the
+    rebuilt entry."""
+    runner = BatchedRunner(capacity=4)
+    old = _touch(runner, 4)
+    state = old.init_random(0)
+    runner.invalidate("block", FRAC, 4, m=1)
+    new = _touch(runner, 4)
+    a = np.asarray(old.run(state, 8))
+    b = np.asarray(new.run(new.init_random(0), 8))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_capacity_validation():
+    with pytest.raises(ValueError):
+        BatchedRunner(capacity=0)
+
+
+def test_concurrent_run_results_bit_exact():
+    """Batched runs from concurrent threads through the shared cache
+    agree with a fresh single-engine reference."""
+    runner = BatchedRunner(capacity=4)
+    seeds = [0, 1, 2, 3]
+    states = runner.init_batch("block", FRAC, 4, seeds, m=1,
+                               workload=LIFE)
+
+    def go(_):
+        return np.asarray(
+            runner.run("block", FRAC, 4, states, 6, m=1,
+                       workload=LIFE))
+
+    with ThreadPoolExecutor(max_workers=4) as ex:
+        outs = list(ex.map(go, range(4)))
+    for o in outs[1:]:
+        np.testing.assert_array_equal(outs[0], o)
