@@ -120,6 +120,10 @@ def _summ_serve(data):
     return dict(data["gate"])
 
 
+def _summ_chaos_dist(data):
+    return dict(data["gate"])
+
+
 #: gate name -> spec. Thresholds and output paths live HERE, not in the
 #: workflow and not in bench defaults. ``threshold`` is the number the
 #: bench gate compares against (None: correctness/parity-only gate);
@@ -192,6 +196,20 @@ GATES = {
               "--out", "BENCH_serve.json"],
         env={}, out="BENCH_serve.json", threshold=1.0,
         summarize=_summ_serve),
+    # the distributed chaos matrix on the 8-device CPU mesh: every
+    # shard-level fault class (exception, stalled launch, device loss
+    # + elastic 8->4 reshard, corrupted halo band, damaged sharded
+    # checkpoint) must recover BIT-EXACT vs an uninterrupted run, and
+    # no recovery may take longer than the bound (threshold is a max
+    # recovery time in seconds, not a min speedup). XLA_FLAGS is set
+    # by the bench itself before importing jax — its own interpreter,
+    # like the distributed gate.
+    "chaos-dist": dict(
+        script="chaos_dist_bench.py",
+        args=["--max-recovery-s", "20.0",
+              "--out", "BENCH_chaos_dist.json"],
+        env={}, out="BENCH_chaos_dist.json", threshold=20.0,
+        summarize=_summ_chaos_dist),
 }
 
 

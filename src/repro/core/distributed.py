@@ -224,6 +224,34 @@ class DistributedSqueezeEngine:
         """Strip padding blocks (for comparison against single-device)."""
         return state[..., : self.layout.n_blocks, :, :]
 
+    def from_dense(self, dense: Array) -> Array:
+        """(B?, C?, n_blocks, rho, rho) unpadded compact state ->
+        engine-native padded + sharded state (the inverse of
+        :meth:`to_dense`). This is the elastic-restore ingest path: a
+        checkpoint saved under ANY mesh stores the mesh-independent
+        dense state, and re-enters here padded for THIS mesh's shard
+        count and device_put with this engine's sharding."""
+        dense = jnp.asarray(dense, jnp.dtype(self.workload.dtype))
+        padded = self._pad_state(dense)
+        return jax.device_put(padded, self.sharding(padded.ndim))
+
+    def dead_mask(self) -> np.ndarray:
+        """(nb_padded, rho, rho) uint8, 1 where a cell must be zero in
+        every valid state: fractal holes inside real blocks (the mask
+        discipline re-kills them each substep) and every cell of a
+        padding block. A nonzero cell under this mask is the signature
+        of halo/strip corruption — the elastic runner's post-launch
+        integrity check multiplies by it."""
+        layout = self.layout
+        hole = (1 - layout.micro_mask).astype(np.uint8)
+        dead = np.broadcast_to(
+            hole, (layout.n_blocks,) + hole.shape)
+        pad = self.nb_padded - layout.n_blocks
+        if pad:
+            dead = np.concatenate(
+                [dead, np.ones((pad,) + hole.shape, np.uint8)], axis=0)
+        return np.ascontiguousarray(dead)
+
     def to_expanded(self, state: Array) -> Array:
         """(B?, C?, nb_padded, rho, rho) -> (B?, C?, n, n) expanded."""
         return self.layout.to_expanded(self.to_dense(state))

@@ -10,7 +10,11 @@ saves (caught by the manager's per-leaf checksums, which fall back to
 the previous intact step). ``FaultInjector`` turns each of those
 failure classes into a *scriptable* event so the serving layer
 (``repro.serving``) can be exercised against the full chaos matrix in
-CI — see DESIGN.md Section 8.
+CI — see DESIGN.md Section 8. The shard-aware kinds (per-shard
+exception, stalled fused launch, device loss, corrupted halo band,
+damaged distributed checkpoint) extend the same plan format to the
+elastic distributed runner (``repro.core.elastic``) — DESIGN.md
+Section 9.
 
 Accounting lives on the telemetry registry (``repro.obs``): the
 watchdog's step times land in a ``watchdog.step_seconds`` histogram
@@ -29,8 +33,12 @@ import itertools
 import os
 import random
 import signal
+import threading
 import time
-from typing import Callable, Iterator, List, Optional, Sequence, Tuple
+from typing import (Callable, Iterator, List, Optional, Sequence,
+                    Tuple)
+
+import numpy as np
 
 from repro.obs import Histogram, default_registry
 
@@ -42,6 +50,23 @@ class SimulatedFailure(RuntimeError):
 class InjectedFault(SimulatedFailure):
     """A fault raised by :class:`FaultInjector` (transient by contract:
     supervisors retry it)."""
+
+
+class DeviceLostError(SimulatedFailure):
+    """A shard's device is gone (injected by the chaos harness;
+    unrecoverable on the current mesh by contract — the elastic runner
+    responds by resharding onto fewer devices)."""
+
+    def __init__(self, msg: str, shard: int = 0):
+        super().__init__(msg)
+        self.shard = shard
+
+
+class HaloCorruptionError(SimulatedFailure):
+    """A post-launch state integrity check failed: cells the occupancy
+    mask says are dead (fractal holes, padding blocks) came back
+    nonzero — the signature of a damaged halo band / edge strip.
+    Transient: supervisors restore the newest intact checkpoint."""
 
 
 #: distinct default label per Watchdog instance, so two watchdogs (e.g.
@@ -120,12 +145,26 @@ class PreemptionHandler:
     originals are kept and restored by :meth:`uninstall` (also the
     context-manager exit), so a scoped handler — one serve() call, one
     test — cannot leak its trap into the rest of the process.
+
+    Handlers NEST: when the serving layer has one installed and an
+    elastic distributed run installs another, the inner handler chains
+    delivery to the saved outer handler (both see the signal), and
+    :meth:`uninstall` restores a signal only while this instance's trap
+    is still the live one — an out-of-order uninstall (outer first)
+    leaves the inner trap untouched instead of clobbering it (the outer
+    instance forfeits its restore; the inner's eventual uninstall
+    re-installs the outer's trap function, which is harmless: it only
+    sets a flag on the already-dismissed outer instance).
     """
 
     _SIGNALS = (signal.SIGTERM, signal.SIGUSR1)
 
     def __init__(self, install: bool = True):
         self.requested = False
+        # ONE bound-method object: `self._handler` creates a fresh
+        # bound method per attribute access, so the is-our-trap-live
+        # identity check in uninstall() needs a stable reference
+        self._trap = self._handler
         self._previous: List[Tuple[int, object]] = []
         if install:
             self.install()
@@ -135,17 +174,21 @@ class PreemptionHandler:
             return  # already installed
         for sig in self._SIGNALS:
             try:
-                prev = signal.signal(sig, self._handler)
+                prev = signal.signal(sig, self._trap)
             except ValueError:
                 break  # not the main thread (tests)
             self._previous.append((sig, prev))
 
     def uninstall(self) -> None:
         """Restore the signal handlers that were active before
-        :meth:`install` (no-op if never installed)."""
+        :meth:`install` (no-op if never installed). A signal whose live
+        handler is no longer ours (a nested handler installed on top)
+        is left alone — see the class docstring."""
         while self._previous:
             sig, prev = self._previous.pop()
             try:
+                if signal.getsignal(sig) is not self._trap:
+                    continue  # nested handler on top: don't clobber it
                 signal.signal(sig, prev)
             except (ValueError, TypeError):
                 pass
@@ -159,6 +202,12 @@ class PreemptionHandler:
 
     def _handler(self, signum, frame):
         self.requested = True
+        # chain to the handler we displaced so an outer
+        # PreemptionHandler (or any user trap) also sees the signal
+        for sig, prev in self._previous:
+            if sig == signum and callable(prev):
+                prev(signum, frame)
+                break
 
     def request(self):  # programmatic (tests / chaos)
         self.requested = True
@@ -231,11 +280,12 @@ def run_with_restarts(make_run: Callable[[], int], max_restarts: int = 3,
 # --------------------------------------------------------- chaos harness
 @dataclasses.dataclass
 class Fault:
-    """One scheduled fault. ``at_segment`` indexes the service's global
-    segment counter (every batched launch across all buckets advances
-    it), so a chaos plan is reproducible run to run.
+    """One scheduled fault. ``at_segment`` indexes the supervisor's
+    monotone event counter — the service's global segment counter, or
+    the elastic distributed runner's launch counter — so a chaos plan
+    is reproducible run to run.
 
-    kind:
+    Serving-layer kinds:
       * ``exception``  — raise :class:`InjectedFault` in the worker
         thread right before the segment's XLA dispatch (the in-step
         crash class);
@@ -249,6 +299,25 @@ class Fault:
         ``target_rid`` (or the next checkpoint saved) so the next
         restore must fall back to the previous intact step;
       * ``truncate``   — same, but truncate the leaf file instead.
+
+    Shard-aware (distributed) kinds, fired at the elastic runner's
+    :meth:`FaultInjector.in_launch` / :meth:`FaultInjector.corrupt_halo`
+    hooks:
+      * ``shard_exception`` — raise :class:`InjectedFault` on shard
+        ``shard`` right before a fused launch (transient: the runner
+        restores the newest intact checkpoint and retries);
+      * ``shard_stall``     — sleep ``stall_s`` inside the launch (past
+        the launch timeout -> the runner abandons the launch, rebuilds
+        the engine, restores, retries);
+      * ``device_loss``     — raise :class:`DeviceLostError` for shard
+        ``shard`` (unrecoverable on the current mesh: the runner
+        performs an elastic reshard onto fewer devices);
+      * ``halo_corrupt``    — poison the edge bands of shard ``shard``'s
+        block tiles in the freshly-launched state (``band_rows`` rows
+        per tile; 0 = the whole tile), simulating a damaged halo strip
+        gather. Detection relies on the mask-discipline invariant
+        (fractal-hole and padding cells must stay zero), which
+        whole-tile poison always violates for a true fractal.
     """
 
     kind: str
@@ -256,9 +325,13 @@ class Fault:
     stall_s: float = 0.0
     via_signal: bool = False
     target_rid: Optional[str] = None
+    shard: int = 0
+    band_rows: int = 0
     fired: bool = False
 
-    _KINDS = ("exception", "stall", "preempt", "corrupt", "truncate")
+    _KINDS = ("exception", "stall", "preempt", "corrupt", "truncate",
+              "shard_exception", "shard_stall", "device_loss",
+              "halo_corrupt")
 
     def __post_init__(self):
         if self.kind not in self._KINDS:
@@ -268,7 +341,7 @@ class Fault:
 
 class FaultInjector:
     """Chaos harness: a scripted plan of :class:`Fault`\\ s fired at the
-    serving layer's hook points.
+    serving layer's and the elastic distributed runner's hook points.
 
     The service calls three hooks:
 
@@ -281,10 +354,26 @@ class FaultInjector:
       * :meth:`on_checkpoint` — after every durable checkpoint save
         (corrupt / truncate damage the just-written files on disk).
 
+    The elastic distributed runner adds two (its launch counter plays
+    the role of the segment index):
+
+      * :meth:`in_launch` — right before a fused launch's dispatch
+        (shard_stall / device_loss / shard_exception fire here);
+      * :meth:`corrupt_halo` — on the host copy of a freshly-launched
+        state (halo_corrupt poisons one shard's tiles).
+
     Every fired fault appends ``(segment, kind, detail)`` to ``.log``
     and counts ``chaos.injected{kind=...}`` on the default registry, so
     a chaos run's injected-vs-recovered arithmetic is checkable from
     telemetry alone.
+
+    Thread safety: hooks fire concurrently from the serving layer's
+    executor threads (and the elastic runner's launch threads). The
+    fire-once claim — scan for due faults, mark them fired, log, count
+    — is atomic under an internal lock, so a fault scheduled once fires
+    exactly once no matter how many threads hit its hook in the same
+    segment. Side effects (sleeping, raising, damaging files) run
+    outside the lock.
     """
 
     def __init__(self, faults: Sequence[Fault] = (),
@@ -292,34 +381,46 @@ class FaultInjector:
         self.faults = list(faults)
         self.handler = handler
         self.log: List[Tuple[int, str, str]] = []
+        self._lock = threading.Lock()
 
-    def _fire(self, fault: Fault, segment: int, detail: str = "") -> None:
-        fault.fired = True
-        self.log.append((segment, fault.kind, detail))
+    def _claim(self, segment: int, kinds: Tuple[str, ...],
+               pred: Optional[Callable[[Fault], bool]] = None
+               ) -> List[Fault]:
+        """Atomically claim (mark fired) every due fault of ``kinds``.
+        The caller records and executes each claimed fault's effect
+        outside the lock."""
+        with self._lock:
+            due = [f for f in self.faults
+                   if not f.fired and f.kind in kinds
+                   and f.at_segment <= segment
+                   and (pred is None or pred(f))]
+            for f in due:
+                f.fired = True
+            return due
+
+    def _record(self, fault: Fault, segment: int,
+                detail: str = "") -> None:
+        with self._lock:
+            self.log.append((segment, fault.kind, detail))
         default_registry().counter("chaos.injected",
                                    kind=fault.kind).inc()
-
-    def _due(self, segment: int, kinds: Tuple[str, ...]) -> List[Fault]:
-        return [f for f in self.faults
-                if not f.fired and f.kind in kinds
-                and f.at_segment <= segment]
 
     # ------------------------------------------------------------- hooks
     def in_step(self, segment: int) -> None:
         """Worker-thread hook, right before the segment's dispatch."""
-        for f in self._due(segment, ("stall",)):
-            self._fire(f, segment, f"stall {f.stall_s}s")
+        for f in self._claim(segment, ("stall",)):
+            self._record(f, segment, f"stall {f.stall_s}s")
             time.sleep(f.stall_s)
-        for f in self._due(segment, ("exception",)):
-            self._fire(f, segment, "raise")
+        for f in self._claim(segment, ("exception",)):
+            self._record(f, segment, "raise")
             raise InjectedFault(
                 f"injected in-step failure at segment {segment}")
 
     def at_boundary(self, segment: int) -> None:
         """Scheduler hook, between segments (main thread)."""
-        for f in self._due(segment, ("preempt",)):
-            self._fire(f, segment,
-                       "SIGTERM" if f.via_signal else "request()")
+        for f in self._claim(segment, ("preempt",)):
+            self._record(f, segment,
+                         "SIGTERM" if f.via_signal else "request()")
             if f.via_signal:
                 os.kill(os.getpid(), signal.SIGTERM)
             elif self.handler is not None:
@@ -331,15 +432,55 @@ class FaultInjector:
     def on_checkpoint(self, rid: str, path: str, segment: int = 0) -> None:
         """Post-save hook: damage the files of the checkpoint at
         ``path`` (a ``step_XXXXXXXX`` directory)."""
-        for f in self._due(segment, ("corrupt", "truncate")):
-            if f.target_rid is not None and f.target_rid != rid:
-                continue
+        pred = (lambda f: f.target_rid is None or f.target_rid == rid)
+        for f in self._claim(segment, ("corrupt", "truncate"), pred):
             n = damage_checkpoint(path, mode=f.kind)
-            self._fire(f, segment, f"{f.kind} {n} file(s) in {path}")
+            self._record(f, segment, f"{f.kind} {n} file(s) in {path}")
+
+    # ------------------------------------------- distributed chaos hooks
+    def in_launch(self, launch: int) -> None:
+        """Elastic-runner hook, right before a fused launch's dispatch
+        (runs inside the launch thread, so a stall really blocks the
+        launch the timeout watchdog is bounding)."""
+        for f in self._claim(launch, ("shard_stall",)):
+            self._record(f, launch, f"stall {f.stall_s}s")
+            time.sleep(f.stall_s)
+        for f in self._claim(launch, ("device_loss",)):
+            self._record(f, launch, f"device lost on shard {f.shard}")
+            raise DeviceLostError(
+                f"injected device loss on shard {f.shard} "
+                f"at launch {launch}", shard=f.shard)
+        for f in self._claim(launch, ("shard_exception",)):
+            self._record(f, launch, f"raise on shard {f.shard}")
+            raise InjectedFault(
+                f"injected shard failure on shard {f.shard} "
+                f"at launch {launch}")
+
+    def corrupt_halo(self, launch: int, state: np.ndarray,
+                     nb_local: int) -> Tuple[np.ndarray, bool]:
+        """Post-launch hook: poison the edge bands of the due faults'
+        target shards in a host copy of ``state`` (last three axes
+        (nb, rho, rho); ``nb_local`` blocks per shard). Returns
+        ``(state, poisoned)`` — the original array untouched when no
+        halo_corrupt fault is due."""
+        due = self._claim(launch, ("halo_corrupt",))
+        if not due:
+            return state, False
+        state = np.array(state, copy=True)
+        for f in due:
+            lo = f.shard * nb_local
+            blocks = state[..., lo:lo + nb_local, :, :]
+            rows = f.band_rows if f.band_rows > 0 else blocks.shape[-2]
+            blocks[..., :rows, :] = np.asarray(127, state.dtype)
+            self._record(
+                f, launch,
+                f"poisoned {rows} row(s) of shard {f.shard}'s tiles")
+        return state, True
 
     # ----------------------------------------------------------- queries
     def pending(self) -> List[Fault]:
-        return [f for f in self.faults if not f.fired]
+        with self._lock:
+            return [f for f in self.faults if not f.fired]
 
     def all_fired(self) -> bool:
         return not self.pending()

@@ -34,7 +34,14 @@ Fault tolerance (the point):
     verification and falls back to the previous intact step
     (``restore_with_fallback``);
   * sustained failure trips the circuit breaker: admission rejects
-    with retry-after instead of letting the queue collapse.
+    with retry-after instead of letting the queue collapse;
+  * ``dist-*`` engine kinds ride the same state machine: their rows
+    checkpoint the mesh-independent dense compact state as *sharded*
+    checkpoints (``save_sharded`` — per-shard leaves, one crc32 each)
+    and restore through ``engine.from_dense`` (re-padded + re-sharded
+    for the engine's current mesh), so the service survives
+    distributed faults — and a checkpoint written under one mesh size
+    restores under another.
 
 Every transition lands on the telemetry registry:
 ``serve.{admitted,rejected,completed,failed,timeouts,preempted,
@@ -292,8 +299,9 @@ class FractalService:
                     # resubmitted): complete without stepping
                     await run_in(self._executor,
                                  lambda row=row: self._finish_row(
-                                     row, "ok", host_state=np.asarray(
-                                         jax.device_get(row.state))))
+                                     row, "ok",
+                                     host_state=self._host_state(
+                                         row.req, row.state)))
                 else:
                     rows.append(row)
                 q = self._pending.get(bucket)
@@ -439,17 +447,53 @@ class FractalService:
             os.path.join(self.config.ckpt_dir, rid),
             keep=self.config.keep_checkpoints)
 
+    def _engine_of(self, req: SimRequest):
+        return self.runner.engine_for(req.kind, req.frac, req.r, req.m,
+                                      req.workload, req.k)
+
+    @staticmethod
+    def _is_dist(req: SimRequest) -> bool:
+        return req.kind.startswith("dist-")
+
+    def _host_state(self, req: SimRequest, state) -> np.ndarray:
+        """Host copy of a row's state for results, snapshots and
+        checkpoints. Distributed rows strip the engine's padding
+        blocks first: the user-facing (and checkpointed) artifact is
+        the mesh-independent dense compact state, so a checkpoint
+        written under one mesh restores under any other."""
+        if self._is_dist(req):
+            state = self._engine_of(req).to_dense(state)
+        return np.asarray(jax.device_get(state))
+
+    def _save_row(self, row: "_Row", host: np.ndarray) -> str:
+        """Checkpoint one row (worker thread). Distributed rows write
+        sharded checkpoints — per-shard leaves with one crc32 each,
+        restorable under a different mesh (the elastic path)."""
+        req = row.req
+        if self._is_dist(req):
+            eng = self._engine_of(req)
+            return row.mgr.save_sharded(
+                row.done, {"state": host}, n_shards=eng.n_shards,
+                axis=host.ndim - 3)
+        return row.mgr.save(row.done, {"state": host})
+
     def _restore_state(self, req: SimRequest):
         """(state, done, mgr): the newest intact checkpoint if one
-        exists, else the seeded initial state. Worker thread."""
-        engine = self.runner.engine_for(req.kind, req.frac, req.r, req.m,
-                                        req.workload, req.k)
+        exists, else the seeded initial state. Worker thread.
+        Distributed checkpoints hold the dense state and re-enter the
+        engine via ``from_dense`` (re-padded + re-sharded for the
+        engine's current mesh)."""
+        engine = self._engine_of(req)
         init = engine.init_random(req.seed)
         mgr = self._mgr_for(req.rid)
+        dist = self._is_dist(req)
         if mgr is not None and mgr.all_steps():
+            like = {"state": engine.to_dense(init) if dist else init}
             try:
-                step, tree = mgr.restore_with_fallback({"state": init})
-                return jnp.asarray(tree["state"]), int(step), mgr
+                step, tree = mgr.restore_with_fallback(like)
+                state = (engine.from_dense(tree["state"]) if dist
+                         else jnp.asarray(tree["state"]))
+                return state, int(step), mgr
             except (CheckpointCorruptError, KeyError, ValueError):
                 pass  # unusable checkpoint family: recompute from seed
         return init, 0, mgr
@@ -469,11 +513,11 @@ class FractalService:
                        and row.done % req.snapshot_every == 0)
             if not (finished or at_snap):
                 continue
-            host = np.asarray(jax.device_get(row.state))
+            host = self._host_state(req, row.state)
             if at_snap and not finished:
                 row.snapshots[row.done] = host
             if row.mgr is not None:
-                path = row.mgr.save(row.done, {"state": host})
+                path = self._save_row(row, host)
                 obs.inc("serve.checkpoints")
                 if self.injector is not None:
                     self.injector.on_checkpoint(req.rid, path, seg_idx)
@@ -484,9 +528,9 @@ class FractalService:
         """Preemption: checkpoint every active row at its current step,
         then resolve it ``preempted``. Worker thread."""
         for row in rows:
-            host = np.asarray(jax.device_get(row.state))
+            host = self._host_state(row.req, row.state)
             if row.mgr is not None:
-                row.mgr.save(row.done, {"state": host})
+                self._save_row(row, host)
                 obs.inc("serve.checkpoints")
             self._finish_row(row, "preempted", host_state=host)
 

@@ -4,6 +4,7 @@ checkpoint — must recover AUTOMATICALLY with bit-exact CA results vs an
 uninterrupted run. Also covers the FaultInjector harness itself and the
 recovery telemetry the CI chaos job uploads."""
 import signal
+import threading
 
 import numpy as np
 import pytest
@@ -182,6 +183,62 @@ def test_injector_preempt_requires_route():
                          handler=h)
     inj2.at_boundary(0)
     assert h.requested
+
+
+def test_injector_claim_is_atomic_under_hammer():
+    """8 threads race every hook call: each scheduled fault must fire
+    EXACTLY once (the claim — scan, mark fired, log, count — is atomic
+    under the injector's lock; without it two threads could both raise
+    the same fault, double-counting chaos.injected)."""
+    n_faults, n_threads = 50, 8
+    with obs.enabled_scope(True) as reg:
+        obs.reset()
+        inj = FaultInjector([Fault(kind="exception", at_segment=s)
+                             for s in range(n_faults)])
+        barrier = threading.Barrier(n_threads)
+        raises = [0] * n_threads
+
+        def worker(i):
+            # segments advance in lockstep so exactly one fault is due
+            # per round — the contention is WITHIN each round, where
+            # all 8 threads hit the same due fault at once
+            for seg in range(n_faults):
+                barrier.wait()
+                try:
+                    inj.in_step(seg)
+                except InjectedFault:
+                    raises[i] += 1
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert sum(raises) == n_faults  # once each, never twice
+        assert len(inj.log) == n_faults
+        assert inj.all_fired()
+        c = reg.counter("chaos.injected", kind="exception")
+        assert c.value == n_faults
+
+
+def test_dist_engine_rows_survive_chaos_bit_exact(tmp_path, refs):
+    """dist-* rows route through the same recovery state machine:
+    crash + damaged checkpoint on a dist-block request must restore
+    from the sharded checkpoint (mesh-independent dense state) and
+    finish bit-exact vs the single-device block reference."""
+    inj = FaultInjector([Fault(kind="exception", at_segment=1),
+                         Fault(kind="corrupt", at_segment=2),
+                         Fault(kind="exception", at_segment=3)])
+    svc = FractalService(_cfg(tmp_path), injector=inj)
+    reqs = [SimRequest(frac=FRAC, r=4, steps=STEPS, m=1, seed=s,
+                       kind="dist-block", snapshot_every=8,
+                       rid=f"dchaos-{s}")
+            for s in range(N)]
+    res = svc.serve(reqs)
+    assert inj.all_fired()
+    _assert_bit_exact(res, refs)
+    assert all(r.recoveries >= 1 for r in res)
 
 
 def test_fault_kind_validated():

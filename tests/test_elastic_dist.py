@@ -1,0 +1,211 @@
+"""ElasticDistributedRunner recovery state machine, in-process on the
+default (single-device) CPU backend: detect -> retry -> restore ->
+degraded-mode, driven by the shard-aware chaos hooks. Bit-exactness is
+always against an uninterrupted SqueezeBlockEngine run of the same
+seed — the compact trajectory is mesh-independent, so the single-device
+reference is the ground truth for every mesh size. The full 8-device
+matrix (including the elastic 8->4 reshard) runs in its own
+interpreter via tests/test_chaos_dist.py."""
+import numpy as np
+import pytest
+
+from repro.core.compact import BlockLayout
+from repro.core.elastic import ElasticDistributedRunner
+from repro.core.fractals import SIERPINSKI
+from repro.core.stencil import SqueezeBlockEngine
+from repro.runtime.fault import (DeviceLostError, Fault, FaultInjector,
+                                 InjectedFault, PreemptionHandler)
+from repro.workloads import LIFE
+
+SEED = 7
+STEPS = 12
+K = 2
+
+
+@pytest.fixture(scope="module")
+def layout():
+    return BlockLayout(SIERPINSKI, r=4, m=2)
+
+
+@pytest.fixture(scope="module")
+def ref(layout):
+    eng = SqueezeBlockEngine(layout, LIFE, fusion_k=K)
+    return np.asarray(eng.run(eng.init_random(SEED), STEPS))
+
+
+def _runner(layout, tmp_path, faults=(), **kw):
+    kw.setdefault("ckpt_dir", str(tmp_path / "ckpts"))
+    kw.setdefault("ckpt_every", 4)
+    kw.setdefault("backoff_base_s", 0.01)
+    kw.setdefault("backoff_cap_s", 0.05)
+    inj = FaultInjector(faults) if faults else None
+    return ElasticDistributedRunner(layout, workload=LIFE, fusion_k=K,
+                                    injector=inj, **kw), inj
+
+
+def _final(runner, out):
+    return np.asarray(runner.engine.to_dense(out))
+
+
+# ------------------------------------------------------------ happy path
+def test_clean_run_matches_block_engine(layout, tmp_path, ref):
+    runner, _ = _runner(layout, tmp_path)
+    with runner:
+        out = runner.run(STEPS, seed=SEED)
+        np.testing.assert_array_equal(_final(runner, out), ref)
+    st = runner.stats
+    assert st.failures == 0 and st.retries == 0
+    assert st.launches == STEPS // K
+    assert st.checkpoints == STEPS // 4  # every boundary landed
+    assert st.steps_done == STEPS
+
+
+def test_from_dense_round_trip(layout, tmp_path):
+    runner, _ = _runner(layout, tmp_path, ckpt_every=0)
+    with runner:
+        eng = runner.engine
+        state = eng.init_random(3)
+        dense = np.asarray(eng.to_dense(state))
+        back = eng.from_dense(dense)
+        np.testing.assert_array_equal(
+            np.asarray(eng.to_dense(back)), dense)
+
+
+# --------------------------------------------------------- fault classes
+def test_shard_exception_retries_bit_exact(layout, tmp_path, ref):
+    runner, inj = _runner(
+        layout, tmp_path,
+        faults=[Fault("shard_exception", at_segment=1, shard=0)])
+    with runner:
+        out = runner.run(STEPS, seed=SEED)
+        np.testing.assert_array_equal(_final(runner, out), ref)
+    assert inj.all_fired()
+    st = runner.stats
+    assert st.failures >= 1 and st.retries >= 1
+    assert st.recoveries >= 1 and st.max_recovery_s > 0.0
+
+
+def test_halo_corruption_detected_and_restored(layout, tmp_path, ref):
+    runner, inj = _runner(
+        layout, tmp_path,
+        faults=[Fault("halo_corrupt", at_segment=1, shard=0)])
+    with runner:
+        out = runner.run(STEPS, seed=SEED)
+        np.testing.assert_array_equal(_final(runner, out), ref)
+    assert inj.all_fired()
+    assert any(kind == "halo_corrupt" for _, kind, _ in inj.log)
+    assert runner.stats.failures >= 1 and runner.stats.retries >= 1
+
+
+def test_stalled_launch_abandoned_and_engine_rebuilt(layout, tmp_path,
+                                                     ref):
+    # launch 0 warms the (seg, shards, shape) key; the stall at launch
+    # 1 then races the post-compile timeout, loses, and the runner
+    # rebuilds the engine + restores
+    runner, inj = _runner(
+        layout, tmp_path,
+        faults=[Fault("shard_stall", at_segment=1, stall_s=2.0)],
+        launch_timeout_s=0.5, compile_grace_s=120.0)
+    eng0 = runner.engine
+    with runner:
+        out = runner.run(STEPS, seed=SEED)
+        np.testing.assert_array_equal(_final(runner, out), ref)
+    assert inj.all_fired()
+    st = runner.stats
+    assert st.hangs >= 1 and runner.watchdog.hangs >= 1
+    assert runner.engine is not eng0  # fresh executables
+    assert runner.n_shards == eng0.n_shards  # same mesh, not a reshard
+
+
+def test_damaged_checkpoint_falls_back_to_previous_step(layout,
+                                                        tmp_path, ref):
+    # ckpt at step 4 saves at launch counter 2, step 8 at counter 4:
+    # damage the step-8 save the moment it lands, then crash a shard —
+    # the restore must walk back to the intact step-4 checkpoint
+    runner, inj = _runner(
+        layout, tmp_path,
+        faults=[Fault("corrupt", at_segment=4),
+                Fault("shard_exception", at_segment=5)])
+    with runner:
+        out = runner.run(STEPS, seed=SEED)
+        np.testing.assert_array_equal(_final(runner, out), ref)
+    assert inj.all_fired()
+    assert runner.stats.restores >= 1
+
+
+def test_device_loss_at_floor_is_terminal(layout, tmp_path):
+    # a single-device mesh cannot shrink: the loss re-raises instead of
+    # resharding (the 8->4 elastic path runs in test_chaos_dist.py)
+    runner, _ = _runner(
+        layout, tmp_path,
+        faults=[Fault("device_loss", at_segment=1, shard=0)],
+        min_devices=1)
+    with runner, pytest.raises(DeviceLostError):
+        runner.run(STEPS, seed=SEED)
+    assert runner.stats.reshards == 0
+    assert not runner.stats.degraded
+
+
+def test_retries_exhausted_reraises(layout, tmp_path):
+    runner, _ = _runner(
+        layout, tmp_path,
+        faults=[Fault("shard_exception", at_segment=i)
+                for i in range(3)],
+        max_retries=2)
+    with runner, pytest.raises(InjectedFault):
+        runner.run(STEPS, seed=SEED)
+    assert runner.stats.failures == 3
+    assert runner.stats.retries == 2  # third failure gave up
+
+
+def test_success_resets_the_retry_budget(layout, tmp_path, ref):
+    # two separate failure streaks, each under max_retries, must both
+    # recover: attempt counts per streak, not per run
+    runner, inj = _runner(
+        layout, tmp_path,
+        faults=[Fault("shard_exception", at_segment=1),
+                Fault("shard_exception", at_segment=4)],
+        max_retries=1)
+    with runner:
+        out = runner.run(STEPS, seed=SEED)
+        np.testing.assert_array_equal(_final(runner, out), ref)
+    assert inj.all_fired()
+    assert runner.stats.recoveries == 2
+    assert len(runner.stats.recovery_seconds) == 2
+
+
+# ------------------------------------------------------- resume / preempt
+def test_fresh_runner_resumes_from_checkpoints(layout, tmp_path, ref):
+    first, _ = _runner(layout, tmp_path)
+    with first:
+        first.run(STEPS, seed=SEED)
+    # same directory, new runner: run() resumes from the newest intact
+    # step (here the final one) instead of recomputing
+    second, _ = _runner(layout, tmp_path)
+    with second:
+        out = second.run(STEPS, seed=SEED)
+        np.testing.assert_array_equal(_final(second, out), ref)
+    assert second.stats.launches == 0  # nothing left to simulate
+    assert second.stats.restores == 1
+    assert second.stats.retries == 0  # a resume is not a failure retry
+
+
+def test_preemption_checkpoints_and_resumes(layout, tmp_path, ref):
+    handler = PreemptionHandler(install=False)
+    handler.request()  # preempted before the first launch
+    first, _ = _runner(layout, tmp_path, preemption=handler)
+    with first:
+        first.run(STEPS, seed=SEED)
+    assert first.stats.preempted
+    assert first.stats.steps_done < STEPS
+    assert first.stats.checkpoints >= 1  # the forced final save
+    second, _ = _runner(layout, tmp_path)
+    with second:
+        out = second.run(STEPS, seed=SEED)
+        np.testing.assert_array_equal(_final(second, out), ref)
+    assert not second.stats.preempted
+
+
+def test_min_devices_validated(layout, tmp_path):
+    with pytest.raises(ValueError):
+        ElasticDistributedRunner(layout, workload=LIFE, min_devices=99)

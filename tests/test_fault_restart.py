@@ -154,8 +154,10 @@ def test_run_with_restarts_wall_clock_give_up():
 def test_preemption_handler_restores_prior_handler():
     import signal
 
-    def custom(signum, frame):  # pragma: no cover - never delivered
-        pass
+    seen = []
+
+    def custom(signum, frame):
+        seen.append(signum)
 
     prev = signal.signal(signal.SIGTERM, custom)
     try:
@@ -164,12 +166,62 @@ def test_preemption_handler_restores_prior_handler():
         import os
         os.kill(os.getpid(), signal.SIGTERM)
         assert h.requested
+        # delivery chains to the displaced trap (user traps still fire)
+        assert seen == [signal.SIGTERM]
         h.uninstall()
         assert signal.getsignal(signal.SIGTERM) == custom
         h.uninstall()  # idempotent
         assert signal.getsignal(signal.SIGTERM) == custom
     finally:
         signal.signal(signal.SIGTERM, prev)
+
+
+def test_preemption_handlers_nest_and_chain():
+    """The serving layer and an elastic distributed run may each hold a
+    handler at once: the signal must reach BOTH, and LIFO uninstall must
+    restore the originals."""
+    import os
+    import signal
+
+    before = {s: signal.getsignal(s)
+              for s in (signal.SIGTERM, signal.SIGUSR1)}
+    try:
+        outer = PreemptionHandler()
+        inner = PreemptionHandler()  # nested on top
+        assert signal.getsignal(signal.SIGTERM) == inner._handler
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert inner.requested and outer.requested  # chained delivery
+        inner.uninstall()
+        assert signal.getsignal(signal.SIGTERM) == outer._handler
+        outer.uninstall()
+        for s, h in before.items():
+            assert signal.getsignal(s) == h
+    finally:
+        for s, h in before.items():
+            signal.signal(s, h)
+
+
+def test_preemption_handler_out_of_order_uninstall_is_safe():
+    """An outer handler uninstalled FIRST must not clobber the inner
+    trap still live on top of it (the regression: uninstall used to
+    restore unconditionally, silently disarming the inner handler)."""
+    import signal
+
+    before = {s: signal.getsignal(s)
+              for s in (signal.SIGTERM, signal.SIGUSR1)}
+    try:
+        outer = PreemptionHandler()
+        inner = PreemptionHandler()
+        outer.uninstall()  # out of order: forfeits its restore
+        assert signal.getsignal(signal.SIGTERM) == inner._handler
+        assert signal.getsignal(signal.SIGUSR1) == inner._handler
+        inner.uninstall()
+        # the inner restores what it displaced — the outer's trap
+        # function, which only flags the already-dismissed instance
+        assert signal.getsignal(signal.SIGTERM) == outer._handler
+    finally:
+        for s, h in before.items():
+            signal.signal(s, h)
 
 
 def test_preemption_handler_context_manager_uninstalls():

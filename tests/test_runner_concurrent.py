@@ -4,6 +4,7 @@ abandoned hang threads racing a fresh retry), so the LRU must stay
 consistent — build-once on concurrent miss, sane eviction accounting,
 no lost or duplicated entries."""
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
@@ -69,9 +70,13 @@ def test_eviction_under_concurrent_access():
                for i in range(8)]
     for t in threads:
         t.start()
-    # let every key build at least once, then stop
-    deadline = threading.Event()
-    deadline.wait(1.0)
+    # let every key build at least once, then stop. Builds compile, so
+    # a fixed-length churn window flakes on slow machines — poll the
+    # counter instead (bounded by a generous deadline).
+    deadline = time.monotonic() + 120.0
+    while (runner.stats.builds < len(rs) and not errs
+           and time.monotonic() < deadline):
+        time.sleep(0.05)
     stop.set()
     for t in threads:
         t.join()
