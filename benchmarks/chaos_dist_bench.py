@@ -4,8 +4,8 @@ fault class must recover bit-exact, inside the recovery-time bound.
     PYTHONPATH=src python benchmarks/chaos_dist_bench.py \
         [--smoke] [--max-recovery-s 20] [--out BENCH_chaos_dist.json]
 
-Five scenarios, one per fault class of the shard-aware chaos matrix
-(DESIGN.md Section 9), each driving an
+Seven scenarios, one per fault class of the shard-aware chaos matrix
+(DESIGN.md Sections 9-10), each driving an
 :class:`~repro.core.elastic.ElasticDistributedRunner` over the full
 8-device mesh with sharded checkpointing enabled:
 
@@ -21,7 +21,13 @@ Five scenarios, one per fault class of the shard-aware chaos matrix
   * ``device_loss``     — a shard's device is lost: elastic reshard
     8 -> 4 devices, the newest intact sharded checkpoint restores onto
     the smaller mesh (repadded, operands rebuilt), degraded-mode
-    finish.
+    finish;
+  * ``strip_drop``      — a neighbor strip send is lost in flight on
+    the p2p (``ppermute``) exchange path: the launch aborts, backoff +
+    restore relaunches and re-issues the permutes;
+  * ``strip_corrupt``   — a received neighbor strip was damaged on the
+    wire (p2p path): the dead-cell integrity check catches the
+    poisoned band rows, restore.
 
 Every scenario asserts the final state is BIT-EXACT against an
 uninterrupted single-device run of the same seed (Life CA), and
@@ -99,6 +105,16 @@ def scenarios(steps, ckpt_every):
         "device_loss": (
             [Fault("device_loss", at_segment=5, shard=3)],
             {}, ckpt_every),
+        # the neighbor-only exchange: pin exchange='p2p' so recovery is
+        # proven on the ppermute path specifically (the other scenarios
+        # ride the 'auto' default, which also resolves to p2p here)
+        "strip_drop": (
+            [Fault("strip_drop", at_segment=2, shard=1)],
+            dict(exchange="p2p"), ckpt_every),
+        "strip_corrupt": (
+            [Fault("strip_corrupt", at_segment=3, shard=2,
+                   band_rows=K)],
+            dict(exchange="p2p"), ckpt_every),
     }
 
 

@@ -124,6 +124,10 @@ def _summ_chaos_dist(data):
     return dict(data["gate"])
 
 
+def _summ_dist_scaling(data):
+    return dict(data["gate"])
+
+
 #: gate name -> spec. Thresholds and output paths live HERE, not in the
 #: workflow and not in bench defaults. ``threshold`` is the number the
 #: bench gate compares against (None: correctness/parity-only gate);
@@ -210,6 +214,21 @@ GATES = {
               "--out", "BENCH_chaos_dist.json"],
         env={}, out="BENCH_chaos_dist.json", threshold=20.0,
         summarize=_summ_chaos_dist),
+    # neighbor-only ppermute exchange vs the all-gather baseline across
+    # the device-count curve (nd = 1, 2, 4, 8) in the exchange-bound
+    # fine-block regime: p2p per-device exchanged bytes/step must stay
+    # flat in the device count while the gather curve grows, and p2p
+    # must not lose to gather on the full mesh (threshold is the max
+    # allowed p2p/gather per-step time ratio). Parity against the
+    # single-device engine is asserted per cell before any timing.
+    # XLA_FLAGS is set by the bench itself — own interpreter, like the
+    # distributed gate.
+    "dist-scaling": dict(
+        script="distributed_bench.py",
+        args=["--scaling", "--max-slowdown", "1.05",
+              "--out", "BENCH_dist_scaling.json"],
+        env={}, out="BENCH_dist_scaling.json", threshold=1.05,
+        summarize=_summ_dist_scaling),
 }
 
 

@@ -1,7 +1,8 @@
 """Distributed Squeeze end to end on 8 (placeholder CPU) devices: one
 compact fractal sharded over the mesh's block axis, k-fused strip halo
-exchange, single-device parity, and the k-fusion knob's effect on the
-collective count and exchanged bytes.
+exchange (neighbor-only ppermute by default, all-gather fallback),
+single-device parity, and the k-fusion knob's effect on the collective
+count and exchanged bytes.
 
     PYTHONPATH=src python examples/distributed.py
 
@@ -40,18 +41,22 @@ for _ in range(STEPS):
     ref = ref_engine.step(ref)
 
 # ---- distributed: the k-fusion knob --------------------------------------
-# k=1 is the every-step-exchange baseline (one strip all-gather per step);
+# k=1 is the every-step-exchange baseline (one halo exchange per step);
 # fused k>=2 exchanges depth-k strips ONCE per k steps — ceil(STEPS/k)
-# collectives for the whole run, bit-exact for CA workloads.
+# exchanges for the whole run, bit-exact for CA workloads.  exchange
+# defaults to 'auto': neighbor-only ppermute whenever the strip
+# decomposition is valid (it is here), all-gather otherwise.
 for k in (1, 2, 4):
     dist = make_distributed_engine(layout, workload=LIFE, compute="jnp",
                                    fusion_k=k)
     out = dist.run(dist.init_random(42), STEPS)
     exact = bool((np.asarray(dist.to_dense(out)) == np.asarray(ref)).all())
     st = dist.exchange_stats()
-    print(f"k={k}: {st.collectives:2d} all-gathers for {STEPS} steps "
+    noun = ("permute pairs" if dist.exchange_mode == "p2p"
+            else "all-gathers")
+    print(f"k={k}: {st.collectives:2d} {noun} for {STEPS} steps "
           f"({st.collectives_per_step:.2f}/step, "
-          f"{st.bytes_per_step / 1024:.1f} KiB gathered/step), "
+          f"{st.bytes_per_step / 1024:.1f} KiB exchanged/step), "
           f"shard-local state {dist.memory_bytes() // dist.n_shards} B, "
           f"bit-exact vs single device: {exact}")
 
@@ -80,7 +85,7 @@ states = runner.init_batch("dist-block", SIERPINSKI, R, seeds=range(4),
 states = runner.run("dist-block", SIERPINSKI, R, states, steps=STEPS,
                     m=M, workload=LIFE, k=2, mesh=mesh)
 print(f"runner: 4 sims x {STEPS} steps, block-axis sharded, state "
-      f"{tuple(states.shape)} — one batched strip all-gather per fused "
+      f"{tuple(states.shape)} — one batched strip exchange per fused "
       f"launch")
 small = runner.init_batch("block", SIERPINSKI, 5, seeds=range(8), m=M,
                           workload=LIFE, mesh=mesh)

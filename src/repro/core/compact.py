@@ -419,6 +419,14 @@ class BlockLayout:
         return self._memo(("dev_existence_padded", k),
                           lambda: self._to_device(self.existence_padded(k)))
 
+    # ------------------------------------------ locality-aware sharding
+    def strip_decomposition(self, n_shards: int) -> "StripDecomposition":
+        """Locality-aware block->shard assignment for the neighbor-only
+        point-to-point halo exchange (one shared build per shard count;
+        see :class:`StripDecomposition`)."""
+        return self._memo(("strip_decomposition", n_shards),
+                          lambda: StripDecomposition(self, n_shards))
+
     # ------------------------------------------------------------ conversions
     def to_expanded(self, state_b: Array) -> Array:
         """Block state (C?, n_blocks, rho, rho) -> (C?, n, n) expanded
@@ -506,3 +514,260 @@ class BlockLayout:
     def memory_bytes(self, dtype_size: int = 1) -> int:
         """Squeeze block-level state bytes (paper Table 2's nu column)."""
         return self.n_blocks * self.rho * self.rho * dtype_size
+
+
+def _balanced_contiguous_partition(counts: np.ndarray,
+                                   n_groups: int) -> list:
+    """Split ``counts`` into ``n_groups`` CONTIGUOUS NONEMPTY groups
+    minimizing the maximum group sum (binary search on the capacity +
+    greedy feasibility; len(counts) >= n_groups required). Returns the
+    half-open index ranges [(a0, b0), ...]."""
+    n = len(counts)
+    if n < n_groups:
+        raise ValueError(f"cannot split {n} rows into {n_groups} "
+                         "nonempty groups")
+
+    def bounds_for(cap):
+        """Greedy fill under ``cap``, always leaving enough rows for the
+        remaining groups to stay nonempty; None when infeasible."""
+        out, start, acc = [], 0, 0
+        g = n_groups
+        for i, c in enumerate(counts):
+            must_cut = (n - i) == (g - 1)  # later groups need the rest
+            if i > start and (acc + c > cap or must_cut):
+                out.append((start, i))
+                start, acc, g = i, 0, g - 1
+            acc += c
+            if acc > cap and i > start:
+                return None
+        out.append((start, n))
+        return out if len(out) == n_groups and acc <= cap else None
+
+    lo, hi = int(counts.max()), int(counts.sum())
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if bounds_for(mid) is None:
+            lo = mid + 1
+        else:
+            hi = mid
+    bounds = bounds_for(lo)
+    assert bounds is not None
+    return bounds
+
+
+@dataclasses.dataclass(frozen=True)
+class StripDecomposition:
+    """Locality-aware block->shard assignment: expanded-space row strips.
+
+    Sharding the compact block domain in compact (digit-interleaved)
+    id order scatters spatially adjacent blocks across shards, which is
+    why the all-gather exchange was needed. This decomposition instead
+    orders blocks by their EXPANDED-space block row (``ey`` of
+    ``block_origin_expanded`` — one lambda evaluation per block, holes
+    handled exactly because only occupied rows exist) and assigns each
+    shard a contiguous strip of whole rows, balanced by block count
+    (``_balanced_contiguous_partition``). Rows are never split, so a
+    block's Moore neighbors (expanded rows ``ey`` +- 1) always live on
+    the SAME shard or one of its two strip neighbors — the static
+    guarantee that makes a neighbor-only ``ppermute`` exchange exact.
+
+    ``valid`` is False when the mesh degenerates (fewer occupied rows
+    than shards: some shard would own no row and the +-1-shard guarantee
+    breaks) — the distributed engine then falls back to the all-gather
+    exchange.
+
+    Native (engine) state layout: shard ``s`` owns native rows
+    ``[s*nb_local, (s+1)*nb_local)``; within a shard, real blocks come
+    first (row-major expanded order), then dead padding slots up to
+    ``nb_local`` (the max strip load). ``perm[i]`` is the compact block
+    id of native row ``i`` (-1 for dead slots).
+
+    Routing tables (all static, built once per (layout, n_shards)):
+
+    * ``send_prev_idx`` / ``send_next_idx`` — (n_shards, ms_prev/next)
+      local indices of the blocks whose edge bands the prev/next strip
+      neighbor actually needs (padded with the ``nb_local`` zero-strip
+      sentinel; clamped to >= 1 slot so the ppermute operands are never
+      zero-sized);
+    * ``table`` — (n_shards, nb_local, 8) per-shard Moore halo table in
+      COMBINED strip coordinates: [0, nbl) local strips, nbl the zero
+      ghost row, [nbl+1, nbl+1+ms_next) strips received from the prev
+      neighbor (its send_next buffer), then ms_prev slots received
+      from the next neighbor (its send_prev buffer);
+    * ``interior_idx`` / ``boundary_idx`` — (n_shards, max_interior/
+      boundary) local indices partitioning each shard's slots into
+      blocks whose depth-k halo is fully shard-local (interior: compute
+      overlaps the in-flight exchange) and blocks that must wait for a
+      neighbor strip (boundary), padded with the same sentinel.
+    """
+
+    layout: BlockLayout
+    n_shards: int
+
+    def __post_init__(self):
+        if self.n_shards < 1:
+            raise ValueError(f"need n_shards >= 1, got {self.n_shards}")
+        self._build()
+
+    def _set(self, **kw):
+        for name, val in kw.items():
+            object.__setattr__(self, name, val)
+
+    # ------------------------------------------------------------- build
+    def _build(self) -> None:
+        layout = self.layout
+        nb, rho = layout.n_blocks, layout.rho
+        org = layout.block_origin_expanded
+        ex, ey = org[:, 0] // rho, org[:, 1] // rho
+        order = np.lexsort((ex, ey)).astype(np.int32)
+        rows, counts = np.unique(ey, return_counts=True)
+        if len(rows) < self.n_shards:
+            self._set(valid=False, nb_local=0, nb_padded=0, perm=None,
+                      shard_of=None, local_of=None)
+            return
+        bounds = _balanced_contiguous_partition(counts, self.n_shards)
+        row_shard = {int(rows[i]): s
+                     for s, (a, b) in enumerate(bounds)
+                     for i in range(a, b)}
+        shard_of = np.array([row_shard[int(y)] for y in ey], np.int32)
+        nbl = int(max(counts[a:b].sum() for a, b in bounds))
+        perm = np.full(self.n_shards * nbl, -1, np.int32)
+        local_of = np.empty(nb, np.int32)
+        fill = np.zeros(self.n_shards, np.int32)
+        for g in order:  # row-major within each strip
+            s = shard_of[g]
+            local_of[g] = fill[s]
+            perm[s * nbl + fill[s]] = g
+            fill[s] += 1
+        self._set(valid=True, nb_local=nbl,
+                  nb_padded=self.n_shards * nbl, perm=perm,
+                  shard_of=shard_of, local_of=local_of)
+        self._build_routing()
+
+    def _build_routing(self) -> None:
+        layout, nbl, ns = self.layout, self.nb_local, self.n_shards
+        table_g = layout.neighbor_table  # (nb, 8) compact block ids
+        ghost = layout.ghost
+        shard_of, local_of = self.shard_of, self.local_of
+        send_prev = [[] for _ in range(ns)]  # local idx needed by s-1
+        send_next = [[] for _ in range(ns)]  # local idx needed by s+1
+        for g in range(layout.n_blocks):
+            s = int(shard_of[g])
+            for ng in table_g[g]:
+                if ng == ghost:
+                    continue
+                d = int(shard_of[ng]) - s
+                if abs(d) > 1:  # the row-strip invariant
+                    raise AssertionError(
+                        f"strip decomposition broke: blocks {g}->{ng} "
+                        f"span shards {s}->{shard_of[ng]}")
+                # ng's strip travels from its shard s+d back to s, i.e.
+                # shard s+1 sends to its PREV neighbor and vice versa
+                tgt = send_prev if d == 1 else send_next if d == -1 \
+                    else None
+                if tgt is not None and local_of[ng] not in tgt[s + d]:
+                    tgt[s + d].append(int(local_of[ng]))
+        for lst in (*send_prev, *send_next):
+            lst.sort()
+        # >= 1 slot: the ppermute operands must never be zero-sized
+        ms_prev = max(1, max(len(x) for x in send_prev))
+        ms_next = max(1, max(len(x) for x in send_next))
+
+        def pad(lists, width):
+            out = np.full((ns, width), nbl, np.int32)  # zero-strip row
+            for s, lst in enumerate(lists):
+                out[s, :len(lst)] = lst
+            return out
+
+        slot_prev = [{li: j for j, li in enumerate(lst)}
+                     for lst in send_prev]
+        slot_next = [{li: j for j, li in enumerate(lst)}
+                     for lst in send_next]
+
+        # per-shard halo table in combined strip coordinates
+        table = np.full((ns, nbl, 8), nbl, np.int32)
+        remote = np.zeros((ns, nbl), bool)
+        for g in range(layout.n_blocks):
+            s, li = int(shard_of[g]), int(local_of[g])
+            for d in range(8):
+                ng = table_g[g, d]
+                if ng == ghost:
+                    continue  # stays the zero ghost row
+                so, lo = int(shard_of[ng]), int(local_of[ng])
+                if so == s:
+                    table[s, li, d] = lo
+                elif so == s - 1:
+                    # recv-from-prev slab = prev shard's send_next
+                    # buffer (width ms_next)
+                    table[s, li, d] = nbl + 1 + slot_next[so][lo]
+                    remote[s, li] = True
+                else:
+                    # recv-from-next slab = next shard's send_prev
+                    # buffer (width ms_prev)
+                    table[s, li, d] = (nbl + 1 + ms_next
+                                       + slot_prev[so][lo])
+                    remote[s, li] = True
+
+        # interior/boundary partition of every local slot (dead padding
+        # slots are interior: they compute to zero without any strip)
+        interior = [np.flatnonzero(~remote[s]) for s in range(ns)]
+        boundary = [np.flatnonzero(remote[s]) for s in range(ns)]
+        mi = max(1, max(len(x) for x in interior))
+        mb = max(1, max(len(x) for x in boundary))
+        self._set(
+            ms_prev=ms_prev, ms_next=ms_next,
+            send_prev_idx=pad(send_prev, ms_prev),
+            send_next_idx=pad(send_next, ms_next),
+            table=table,
+            interior_idx=pad(interior, mi),
+            boundary_idx=pad(boundary, mb),
+            n_interior=np.array([len(x) for x in interior], np.int32),
+            n_boundary=np.array([len(x) for x in boundary], np.int32),
+            real_sends=sum(1 for s in range(ns - 1)
+                           if len(send_next[s])) +
+            sum(1 for s in range(1, ns) if len(send_prev[s])),
+        )
+
+    # ------------------------------------------------------- exchange ops
+    def pack_edge_strips_for(self, strips_z: Array, neighbor: str,
+                             shard: int = 0) -> Array:
+        """Gather the send buffer for one strip neighbor out of this
+        shard's zero-row-appended local strips (``strips_z``:
+        (L, nb_local+1, 4, k, rho)). ``neighbor``: 'prev' | 'next'.
+        Inside shard_map the per-shard routing row arrives as a sharded
+        operand; this host-facing form (used by the tests' exchange
+        simulation) selects it by ``shard``."""
+        idx = (self.send_prev_idx if neighbor == "prev"
+               else self.send_next_idx)[shard]
+        return strips_z[:, idx]
+
+    def halo_from_neighbor_strips_k(self, combined: Array, table: Array,
+                                    k: int):
+        """Assemble depth-``k`` halo pieces from the COMBINED per-shard
+        strip array (local strips + zero row + received neighbor slabs,
+        in the ``table`` coordinate convention) — the neighbor-routed
+        counterpart of :meth:`BlockLayout.halo_from_strips_k`, sharing
+        its band layout with every depth-k consumer."""
+        return self.layout.halo_from_strips_k(combined, table, k)
+
+    # ------------------------------------------------------- accounting
+    def slot_bytes(self, k: int, itemsize: int) -> int:
+        """Bytes of one strip slot (all four depth-``k`` edge bands of
+        one block): 4 * k * rho cells."""
+        return 4 * k * self.layout.rho * itemsize
+
+    def wire_bytes_per_exchange(self, k: int, itemsize: int,
+                                batch: int = 1) -> int:
+        """Total bytes moved over the interconnect by one depth-``k``
+        p2p exchange: both ppermutes ship their (clamped) buffers
+        between every adjacent shard pair."""
+        slots = (self.ms_prev + self.ms_next) * (self.n_shards - 1)
+        return batch * slots * self.slot_bytes(k, itemsize)
+
+    def wire_bytes_per_device_per_exchange(self, k: int, itemsize: int,
+                                           batch: int = 1) -> int:
+        """Bytes RECEIVED by one (interior) shard per exchange — the
+        per-device wire pressure, independent of the shard count (the
+        flat curve the scaling gate asserts)."""
+        return (batch * (self.ms_prev + self.ms_next)
+                * self.slot_bytes(k, itemsize))

@@ -133,6 +133,7 @@ class ElasticDistributedRunner:
                  workload: StencilWorkload = LIFE, compute: str = "jnp",
                  fusion_k: Optional[int] = None,
                  interpret: Optional[bool] = None,
+                 exchange: str = "auto",
                  min_devices: int = 1,
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
                  keep: int = 3,
@@ -157,6 +158,7 @@ class ElasticDistributedRunner:
         self.compute = compute
         self.fusion_k = fusion_k
         self.interpret = interpret
+        self.exchange = exchange
         self.min_devices = min_devices
         self.ckpt_every = int(ckpt_every)
         self.mgr = (CheckpointManager(ckpt_dir, keep=keep)
@@ -205,7 +207,7 @@ class ElasticDistributedRunner:
         mesh = Mesh(np.array(self.devices), (self.axis,))
         self.engine = DistributedSqueezeEngine(
             self.layout, mesh, self.axis, self.workload, self.compute,
-            self.fusion_k, self.interpret)
+            self.fusion_k, self.interpret, self.exchange)
         dead = self.engine.dead_mask()
         self._dead = jax.device_put(
             dead, NamedSharding(mesh, P(self.axis, None, None)))

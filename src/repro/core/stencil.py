@@ -391,7 +391,8 @@ _DIST_KINDS = {"dist-block": "jnp", "dist-fused": "fused",
 
 def make_engine(kind: str, frac, r: int, m: int = 0,
                 workload: StencilWorkload = LIFE,
-                fusion_k: Optional[int] = None, mesh=None, axis: str = "data"):
+                fusion_k: Optional[int] = None, mesh=None,
+                axis: str = "data", exchange: str = "auto"):
     """Engine factory.
 
     kind: 'bb' | 'lambda' | 'cell' | 'block' | 'pallas-blocks' |
@@ -411,10 +412,13 @@ def make_engine(kind: str, frac, r: int, m: int = 0,
     The 'dist-*' kinds are the multi-device engine of
     ``core/distributed.py``: the compact block domain sharded over
     ``mesh``'s ``axis`` (default: all devices on one "data" axis) with a
-    k-fused strip halo exchange (one all-gather per k steps) and the
-    named shard-local compute backend — 'dist-block' is the XLA window
-    path, 'dist-fused' the v4 fused-depth kernel, 'dist-mxu' the v5 MXU
-    macro-tile kernel. See DESIGN.md Section 4.
+    k-fused strip halo exchange (one exchange per k steps; ``exchange``
+    picks 'p2p' neighbor-only ppermute with interior/boundary compute
+    overlap, the 'gather' all-gather fallback, or 'auto' = p2p whenever
+    the strip decomposition is valid) and the named shard-local compute
+    backend — 'dist-block' is the XLA window path, 'dist-fused' the v4
+    fused-depth kernel, 'dist-mxu' the v5 MXU macro-tile kernel. See
+    DESIGN.md Sections 4 and 10.
 
     The '*3d' kinds take an ``NBBFractal3D`` and a 3D single-channel
     workload (LIFE3D, HEAT3D): 'bb3d'/'cell3d' are the expanded and
@@ -428,7 +432,7 @@ def make_engine(kind: str, frac, r: int, m: int = 0,
     the workload dtype), both labeled by ``kind``.
     """
     engine = _make_engine(kind, frac, r, m, workload, fusion_k, mesh,
-                          axis)
+                          axis, exchange)
     if obs.enabled():
         obs.inc("engine.builds", kind=kind)
         if hasattr(engine, "memory_bytes"):
@@ -445,7 +449,7 @@ def make_engine(kind: str, frac, r: int, m: int = 0,
 
 def _make_engine(kind: str, frac, r: int, m: int,
                  workload: StencilWorkload, fusion_k: Optional[int],
-                 mesh, axis: str):
+                 mesh, axis: str, exchange: str = "auto"):
     from repro.core.baselines import LambdaEngine
     if kind in ("bb3d", "cell3d", "block3d") or kind.startswith("pallas-3d"):
         from repro.core import stencil3d as s3
@@ -475,7 +479,7 @@ def _make_engine(kind: str, frac, r: int, m: int,
         return make_distributed_engine(
             BlockLayout(frac, r, m), mesh=mesh, axis=axis,
             workload=workload, compute=_DIST_KINDS[kind],
-            fusion_k=fusion_k)
+            fusion_k=fusion_k, exchange=exchange)
     if kind == "pallas":
         kind = "pallas-strips"
     if kind.startswith("pallas-"):

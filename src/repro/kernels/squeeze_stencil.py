@@ -569,7 +569,10 @@ def _mxu_kernel(workload, k, p, n_terms, ex_ref, c_ref, top_ref, bot_ref,
         m = wm
         for d, (ys, xs) in enumerate(_halo_regions(rho, k)):
             m = m.at[ys, xs].set(m[ys, xs] * ex_ref[i * p + s, d])
-        mask = mask.at[:, b0:b0 + w].set(m)
+        # P=1 degenerates the slot update to a whole-array write, which
+        # jnp lowers to a scatter with an empty index constant that
+        # pallas refuses to capture — assign directly instead
+        mask = m if p == 1 else mask.at[:, b0:b0 + w].set(m)
 
     rm = r_ref[...]                          # (T, w, w) f32
     ct = ct_ref[...]                         # (T, P*w, P*w) f32
@@ -598,8 +601,9 @@ def _mxu_kernel(workload, k, p, n_terms, ex_ref, c_ref, top_ref, bot_ref,
 
     out = jnp.zeros((nc, rho, p * rho), out_ref.dtype)
     for s in range(p):
-        out = out.at[:, :, s * rho:(s + 1) * rho].set(
-            cur[:, k:k + rho, s * w + k:s * w + k + rho].astype(out.dtype))
+        sl = cur[:, k:k + rho, s * w + k:s * w + k + rho].astype(out.dtype)
+        # same P=1 whole-array degeneracy as the mask assembly above
+        out = sl if p == 1 else out.at[:, :, s * rho:(s + 1) * rho].set(sl)
     out_ref[0, :, 0] = out
 
 

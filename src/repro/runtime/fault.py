@@ -317,7 +317,18 @@ class Fault:
         per tile; 0 = the whole tile), simulating a damaged halo strip
         gather. Detection relies on the mask-discipline invariant
         (fractal-hole and padding cells must stay zero), which
-        whole-tile poison always violates for a true fractal.
+        whole-tile poison always violates for a true fractal;
+      * ``strip_drop``      — a neighbor strip send from shard ``shard``
+        is lost in flight, aborting the p2p exchange: raises
+        :class:`InjectedFault` at the launch hook (transient — the
+        runner restores the newest intact checkpoint and relaunches,
+        re-issuing the permutes);
+      * ``strip_corrupt``   — a RECEIVED neighbor strip was damaged on
+        the wire: poisons the top and bottom ``band_rows`` rows (the
+        rows a neighbor's edge strip feeds; 0 = depth 1) of shard
+        ``shard``'s tiles post-launch. Caught by the same dead-cell
+        integrity check as ``halo_corrupt`` -> checkpoint restore,
+        bit-exact on either exchange path.
     """
 
     kind: str
@@ -331,7 +342,7 @@ class Fault:
 
     _KINDS = ("exception", "stall", "preempt", "corrupt", "truncate",
               "shard_exception", "shard_stall", "device_loss",
-              "halo_corrupt")
+              "halo_corrupt", "strip_drop", "strip_corrupt")
 
     def __post_init__(self):
         if self.kind not in self._KINDS:
@@ -455,6 +466,12 @@ class FaultInjector:
             raise InjectedFault(
                 f"injected shard failure on shard {f.shard} "
                 f"at launch {launch}")
+        for f in self._claim(launch, ("strip_drop",)):
+            self._record(f, launch,
+                         f"dropped neighbor strip from shard {f.shard}")
+            raise InjectedFault(
+                f"injected dropped neighbor-strip send from shard "
+                f"{f.shard} at launch {launch}: halo exchange aborted")
 
     def corrupt_halo(self, launch: int, state: np.ndarray,
                      nb_local: int) -> Tuple[np.ndarray, bool]:
@@ -463,18 +480,28 @@ class FaultInjector:
         (nb, rho, rho); ``nb_local`` blocks per shard). Returns
         ``(state, poisoned)`` — the original array untouched when no
         halo_corrupt fault is due."""
-        due = self._claim(launch, ("halo_corrupt",))
+        due = self._claim(launch, ("halo_corrupt", "strip_corrupt"))
         if not due:
             return state, False
         state = np.array(state, copy=True)
         for f in due:
             lo = f.shard * nb_local
             blocks = state[..., lo:lo + nb_local, :, :]
-            rows = f.band_rows if f.band_rows > 0 else blocks.shape[-2]
-            blocks[..., :rows, :] = np.asarray(127, state.dtype)
-            self._record(
-                f, launch,
-                f"poisoned {rows} row(s) of shard {f.shard}'s tiles")
+            if f.kind == "strip_corrupt":
+                # a damaged neighbor strip feeds the receiving blocks'
+                # outermost rows: poison both row bands of the shard
+                rows = max(1, f.band_rows)
+                blocks[..., :rows, :] = np.asarray(127, state.dtype)
+                blocks[..., -rows:, :] = np.asarray(127, state.dtype)
+                detail = (f"poisoned {rows} strip band row(s) of "
+                          f"shard {f.shard}'s tiles")
+            else:
+                rows = f.band_rows if f.band_rows > 0 \
+                    else blocks.shape[-2]
+                blocks[..., :rows, :] = np.asarray(127, state.dtype)
+                detail = (f"poisoned {rows} row(s) of shard "
+                          f"{f.shard}'s tiles")
+            self._record(f, launch, detail)
         return state, True
 
     # ----------------------------------------------------------- queries

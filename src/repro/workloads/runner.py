@@ -65,7 +65,7 @@ Array = jnp.ndarray
 #: import time; ``mesh`` is None for single-device kinds (jax Meshes are
 #: hashable, so a multi-device placement is part of the cache identity).
 Key = Tuple[str, Hashable, int, int, StencilWorkload, int,
-            Optional[Hashable], str]
+            Optional[Hashable], str, str]
 
 #: engine kinds with block tiles (these support temporal fusion; for the
 #: rest k normalizes to 1 so equal configurations share a cache slot)
@@ -138,20 +138,24 @@ class BatchedRunner:
 
     def _resolve_key(self, kind: str, frac: NBBFractal, r: int, m: int,
                      workload: StencilWorkload, k: Optional[int] = None,
-                     mesh=None, axis: str = "data") -> Key:
+                     mesh=None, axis: str = "data",
+                     exchange: str = "auto") -> Key:
         """The normalized cache identity of one configuration."""
         if kind == "pallas":  # make_engine's alias; one cache slot, not two
             kind = "pallas-strips"
         k = self._resolve_k(kind, frac, m, k)
         if not _is_dist(kind):
             mesh = None  # placement-only for non-dist kinds; one slot
-        return (kind, frac, r, m, workload, k, mesh, axis)
+            exchange = "auto"  # halo exchange is a dist-only knob
+        return (kind, frac, r, m, workload, k, mesh, axis, exchange)
 
     def _get(self, kind: str, frac: NBBFractal, r: int, m: int,
              workload: StencilWorkload, k: Optional[int] = None,
-             mesh=None, axis: str = "data") -> _Entry:
-        key = self._resolve_key(kind, frac, r, m, workload, k, mesh, axis)
-        kind, _, _, _, _, k, mesh, axis = key
+             mesh=None, axis: str = "data",
+             exchange: str = "auto") -> _Entry:
+        key = self._resolve_key(kind, frac, r, m, workload, k, mesh, axis,
+                                exchange)
+        kind, _, _, _, _, k, mesh, axis, exchange = key
         while True:
             with self._lock:
                 entry = self._cache.get(key)
@@ -177,7 +181,7 @@ class BatchedRunner:
     def _build(self, key: Key) -> _Entry:
         """Construct + wrap the engine for ``key`` (no lock held: engine
         construction and jax tracing can take seconds)."""
-        kind, frac, r, m, workload, k, mesh, axis = key
+        kind, frac, r, m, workload, k, mesh, axis, exchange = key
         obs.inc("runner.cache.miss", kind=kind)
         obs.inc("runner.build", kind=kind, workload=workload.name, k=k)
         from repro.core.stencil import make_engine
@@ -186,7 +190,7 @@ class BatchedRunner:
         # kinds — an explicit k=1 must mean "no fusion", not "heuristic"
         engine = make_engine(kind, frac, r, m, workload=workload,
                              fusion_k=k if is_block else None,
-                             mesh=mesh, axis=axis)
+                             mesh=mesh, axis=axis, exchange=exchange)
         if _is_dist(kind):
             # the distributed engine owns its jit cache, its fused-launch
             # tiling (exactly ceil(steps/k) collectives) and its exchange
@@ -268,23 +272,25 @@ class BatchedRunner:
     def is_cached(self, kind: str, frac: NBBFractal, r: int, m: int = 0,
                   workload: StencilWorkload = LIFE,
                   k: Optional[int] = None, mesh=None,
-                  axis: str = "data") -> bool:
+                  axis: str = "data", exchange: str = "auto") -> bool:
         """Whether this configuration is a warm cache hit right now
         (no build, no LRU touch) — the serving layer's admission
         control uses this to bound concurrent cold compiles."""
-        key = self._resolve_key(kind, frac, r, m, workload, k, mesh, axis)
+        key = self._resolve_key(kind, frac, r, m, workload, k, mesh, axis,
+                                exchange)
         with self._lock:
             return key in self._cache
 
     def invalidate(self, kind: str, frac: NBBFractal, r: int, m: int = 0,
                    workload: StencilWorkload = LIFE,
                    k: Optional[int] = None, mesh=None,
-                   axis: str = "data") -> bool:
+                   axis: str = "data", exchange: str = "auto") -> bool:
         """Drop one compiled entry (if cached): the serving layer's
         engine-restart path after a watchdog-detected hang — the next
         ``run`` rebuilds from scratch. Returns True if an entry was
         evicted."""
-        key = self._resolve_key(kind, frac, r, m, workload, k, mesh, axis)
+        key = self._resolve_key(kind, frac, r, m, workload, k, mesh, axis,
+                                exchange)
         with self._lock:
             entry = self._cache.pop(key, None)
             if entry is not None:
@@ -293,9 +299,16 @@ class BatchedRunner:
 
     def engine_for(self, kind: str, frac: NBBFractal, r: int, m: int = 0,
                    workload: StencilWorkload = LIFE,
-                   k: Optional[int] = None, mesh=None, axis: str = "data"):
-        """The (cached) underlying single-simulation engine."""
-        return self._get(kind, frac, r, m, workload, k, mesh, axis).engine
+                   k: Optional[int] = None, mesh=None, axis: str = "data",
+                   exchange: str = "auto"):
+        """The (cached) underlying single-simulation engine. ``exchange``
+        picks the dist-* halo-exchange mode ('auto' | 'p2p' | 'gather';
+        ignored — and normalized out of the cache key — for
+        single-device kinds). ``step``/``run`` use the 'auto' default,
+        which resolves to the neighbor-only p2p exchange whenever the
+        mesh supports it."""
+        return self._get(kind, frac, r, m, workload, k, mesh, axis,
+                         exchange).engine
 
     def cache_size(self) -> int:
         return len(self._cache)

@@ -5,8 +5,11 @@ and must NOT leak into the main pytest process — see dryrun.py's same
 pattern). The full parity matrix lives in-process in
 tests/test_distributed_fused.py; this smoke keeps one real 8-shard mesh
 in the loop: a couple of fractals, every shard-local compute backend,
-fused and unfused depths, the exchange accounting, and the structural
-one-all-gather-per-launch check against the lowered 8-device HLO.
+BOTH halo-exchange modes (neighbor-only ppermute and the all-gather
+fallback), fused and unfused depths, the exchange accounting, and the
+structural collective checks against the lowered 8-device HLO (one
+all_gather per gather launch; two collective_permutes and zero
+all_gathers per p2p launch).
 """
 import os
 
@@ -24,11 +27,12 @@ from repro.core.stencil import SqueezeBlockEngine  # noqa: E402
 from repro.workloads.rules import GRAY_SCOTT, LIFE  # noqa: E402
 
 
-def check(frac, r, m, workload, compute, k, steps=5):
+def check(frac, r, m, workload, compute, k, steps=5, exchange="gather"):
     layout = BlockLayout(frac, r, m)
     dist = make_distributed_engine(layout, workload=workload,
                                    compute=compute, fusion_k=k,
-                                   interpret=True)
+                                   interpret=True, exchange=exchange)
+    assert dist.exchange_mode == exchange, (dist.exchange_mode, exchange)
     local = SqueezeBlockEngine(layout, workload, fusion_k=1)
 
     s_dist = dist.init_random(seed=13)
@@ -41,21 +45,27 @@ def check(frac, r, m, workload, compute, k, steps=5):
         s_local = local.step(s_local)
     got = np.asarray(dist.to_dense(s_dist))
     want = np.asarray(s_local)
-    tag = f"{frac.name}/{workload.name}/{compute}/k={k}"
+    tag = f"{frac.name}/{workload.name}/{compute}/{exchange}/k={k}"
     if workload.dtype == np.uint8:
         np.testing.assert_array_equal(got, want, err_msg=tag)
     else:
         np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5,
                                    err_msg=tag)
 
-    # padding blocks must stay dead
-    pad = np.asarray(s_dist)[..., layout.n_blocks:, :, :]
-    assert (pad == 0).all(), f"{tag}: padding blocks came alive"
+    # dead cells (fractal holes + padding blocks, wherever the native
+    # block order puts them) must stay dead
+    dead = np.asarray(s_dist) * dist.dead_mask()
+    assert (dead == 0).all(), f"{tag}: dead blocks came alive"
 
-    # exactly ceil(steps/k) halo all-gathers
+    # exactly ceil(steps/k) halo exchanges, on the right byte counter
     st = dist.exchange_stats()
     assert st.steps == steps, st
     assert st.collectives == math.ceil(steps / k), (tag, st)
+    if exchange == "p2p":
+        assert st.bytes_permuted > 0 and st.bytes_gathered == 0, (tag, st)
+        assert st.neighbor_sends == st.collectives * 2 * 7, (tag, st)
+    else:
+        assert st.bytes_gathered > 0 and st.bytes_permuted == 0, (tag, st)
     print(f"{tag}: distributed == single-device over {steps} steps, "
           f"{st.collectives} collectives")
     return dist
@@ -70,14 +80,35 @@ def main():
     check(fractals.SIERPINSKI, 6, 2, LIFE, "jnp", k=1)
     check(fractals.SIERPINSKI, 6, 2, GRAY_SCOTT, "mxu", k=2)
 
-    # structural: ONE all_gather in the lowered 8-shard fused step
+    # the neighbor-only ppermute exchange: same matrix spine on p2p
+    for compute in ("jnp", "fused", "mxu"):
+        check(fractals.SIERPINSKI, 6, 2, LIFE, compute, k=2,
+              exchange="p2p")
+    check(fractals.CARPET, 3, 1, LIFE, "jnp", k=2, exchange="p2p")
+    check(fractals.SIERPINSKI, 6, 2, GRAY_SCOTT, "mxu", k=2,
+          exchange="p2p")
+
+    # structural: ONE all_gather in the lowered 8-shard gather step
     layout = BlockLayout(fractals.SIERPINSKI, 6, 2)
     dist = make_distributed_engine(layout, workload=LIFE, compute="jnp",
-                                   fusion_k=2, interpret=True)
+                                   fusion_k=2, interpret=True,
+                                   exchange="gather")
     txt = dist.lowered_step_text(dist.init_random(0), 2)
     n_ag = txt.count('"stablehlo.all_gather"')
     assert n_ag == 1, f"expected 1 all_gather in the fused step, got {n_ag}"
-    print("fused step lowers to exactly one all_gather")
+    print("gather step lowers to exactly one all_gather")
+
+    # structural: the p2p step is all-gather-free — exactly the two
+    # neighbor permute shifts
+    dist = make_distributed_engine(layout, workload=LIFE, compute="jnp",
+                                   fusion_k=2, interpret=True,
+                                   exchange="p2p")
+    txt = dist.lowered_step_text(dist.init_random(0), 2)
+    n_ag = txt.count('"stablehlo.all_gather"')
+    n_cp = txt.count('"stablehlo.collective_permute"')
+    assert n_ag == 0, f"expected 0 all_gathers in the p2p step, got {n_ag}"
+    assert n_cp == 2, f"expected 2 collective_permutes, got {n_cp}"
+    print("p2p step lowers to two collective_permutes, zero all_gathers")
     print("DISTRIBUTED_OK")
 
 

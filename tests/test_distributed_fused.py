@@ -132,31 +132,56 @@ def test_multi_channel_batched():
 
 
 # -------------------------------------------------------- exchange accounting
+@pytest.mark.parametrize("exchange", ["gather", "p2p"])
 @pytest.mark.parametrize("steps,k", [(5, 2), (6, 3), (7, 4), (4, 1), (3, 4)])
-def test_exactly_ceil_steps_over_k_collectives(steps, k):
+def test_exactly_ceil_steps_over_k_collectives(steps, k, exchange):
     """A run of ``steps`` at fusion depth ``k`` issues exactly
-    ceil(steps/k) halo all-gathers — the fused remainder launch included
-    (NOT floor(steps/k) + (steps % k) single steps)."""
+    ceil(steps/k) halo exchanges — the fused remainder launch included
+    (NOT floor(steps/k) + (steps % k) single steps) — in BOTH exchange
+    modes."""
     layout = _layout()
     dist = make_distributed_engine(layout, workload=LIFE, compute="jnp",
-                                   fusion_k=k, interpret=True)
+                                   fusion_k=k, interpret=True,
+                                   exchange=exchange)
     dist.run(dist.init_random(0), steps)
     st = dist.exchange_stats()
     assert st.steps == steps
     assert st.collectives == math.ceil(steps / k), st
-    assert st.bytes_gathered > 0
+    if exchange == "gather":
+        assert st.exchanged_bytes > 0
+    else:
+        # exact wire model; zero on this 1-shard mesh (nothing crosses
+        # a device boundary — the permutes carry (n_shards-1) payloads)
+        assert st.exchanged_bytes == (math.ceil(steps / k)
+                                      * dist.permute_bytes(k))
     dist.reset_exchange_stats()
     assert dist.exchange_stats().collectives == 0
 
 
 def test_one_all_gather_in_lowered_step():
-    """Structural check behind the counters: the lowered fused step
-    contains exactly ONE all_gather op (strips only, once per launch)."""
+    """Structural check behind the counters: the lowered fused gather
+    step contains exactly ONE all_gather op (strips only, once per
+    launch)."""
     layout = _layout()
     dist = make_distributed_engine(layout, workload=LIFE, compute="jnp",
-                                   fusion_k=2, interpret=True)
+                                   fusion_k=2, interpret=True,
+                                   exchange="gather")
     txt = dist.lowered_step_text(dist.init_random(0), 2)
     assert txt.count('"stablehlo.all_gather"') == 1, txt[:2000]
+
+
+def test_p2p_lowered_step_structure():
+    """The p2p twin: two neighbor collective_permutes (forward and
+    backward shift), NO all_gather anywhere in the lowered launch —
+    neighbor-only exchange is structural, not just accounted."""
+    layout = _layout()
+    dist = make_distributed_engine(layout, workload=LIFE, compute="jnp",
+                                   fusion_k=2, interpret=True,
+                                   exchange="p2p")
+    assert dist.exchange_mode == "p2p"
+    txt = dist.lowered_step_text(dist.init_random(0), 2)
+    assert txt.count('"stablehlo.all_gather"') == 0, txt[:2000]
+    assert txt.count('"stablehlo.collective_permute"') == 2, txt[:2000]
 
 
 def test_exchange_bytes_model():
@@ -166,13 +191,37 @@ def test_exchange_bytes_model():
     layout = _layout()
     k = 3
     dist = make_distributed_engine(layout, workload=LIFE, compute="jnp",
-                                   fusion_k=k, interpret=True)
+                                   fusion_k=k, interpret=True,
+                                   exchange="gather")
     dist.run(dist.init_random(0), k)  # one fused launch
     st = dist.exchange_stats()
     assert st.collectives == 1
     assert st.bytes_gathered == dist.strip_bytes(k)
+    assert st.bytes_permuted == 0 and st.neighbor_sends == 0
     assert dist.strip_bytes(k) == (dist.nb_padded * 4 * k * layout.rho
                                    * jnp.dtype(LIFE.dtype).itemsize)
+
+
+def test_exchange_bytes_model_p2p():
+    """The p2p twin: bytes_permuted matches the analytic per-neighbor
+    routing volume (ms_prev + ms_next slots per device per launch),
+    neighbor_sends counts 2*(n_shards-1) directed sends per launch, and
+    nothing is all-gathered."""
+    layout = _layout()
+    k = 3
+    dist = make_distributed_engine(layout, workload=LIFE, compute="jnp",
+                                   fusion_k=k, interpret=True,
+                                   exchange="p2p")
+    dist.run(dist.init_random(0), k)  # one fused launch
+    st = dist.exchange_stats()
+    assert st.collectives == 1
+    assert st.bytes_gathered == 0
+    assert st.bytes_permuted == dist.permute_bytes(k)
+    assert st.neighbor_sends == 2 * (dist.n_shards - 1)
+    d = dist.decomp
+    assert dist.wire_bytes_per_device(k) == (
+        (d.ms_prev + d.ms_next) * 4 * k * layout.rho
+        * jnp.dtype(LIFE.dtype).itemsize)
 
 
 def test_memory_bytes():

@@ -263,6 +263,31 @@ def test_distributed_collectives_match_exchange_stats(reg):
     assert reg.value("dist.bytes_gathered", compute="fused") == \
         st.bytes_gathered
     assert reg.value("dist.steps", compute="fused") == st.steps == 5
+    # the p2p counters mirror too (zero in gather mode, but PRESENT —
+    # dashboards can subtract modes without schema branches)
+    assert reg.value("dist.bytes_permuted", compute="fused") == \
+        st.bytes_permuted
+    assert reg.value("dist.neighbor_sends", compute="fused") == \
+        st.neighbor_sends
+
+
+def test_distributed_p2p_counters_match_exchange_stats(reg):
+    """The p2p exchange mirrors its wire accounting into telemetry:
+    dist.bytes_permuted / dist.neighbor_sends equal exchange_stats(),
+    and the gather counter stays zero."""
+    eng = make_distributed_engine(BlockLayout(FRAC, 5, 2), workload=LIFE,
+                                  compute="jnp", fusion_k=2,
+                                  exchange="p2p")
+    assert eng.exchange_mode == "p2p"
+    eng.run(eng.init_random(0), 5)
+    st = eng.exchange_stats()
+    assert st.collectives == 3 and st.bytes_gathered == 0
+    for name, want in (("dist.collectives", st.collectives),
+                       ("dist.bytes_permuted", st.bytes_permuted),
+                       ("dist.neighbor_sends", st.neighbor_sends),
+                       ("dist.bytes_gathered", 0),
+                       ("dist.steps", 5)):
+        assert reg.value(name, compute="jnp") == want, name
 
 
 # ----------------------------------------------------- acceptance path
