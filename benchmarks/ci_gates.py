@@ -128,6 +128,10 @@ def _summ_dist_scaling(data):
     return dict(data["gate"])
 
 
+def _summ_tuner(data):
+    return dict(data["gate"])
+
+
 #: gate name -> spec. Thresholds and output paths live HERE, not in the
 #: workflow and not in bench defaults. ``threshold`` is the number the
 #: bench gate compares against (None: correctness/parity-only gate);
@@ -229,6 +233,19 @@ GATES = {
               "--out", "BENCH_dist_scaling.json"],
         env={}, out="BENCH_dist_scaling.json", threshold=1.05,
         summarize=_summ_dist_scaling),
+    # the autotuner's bounded ci-preset sweep: every candidate parity-
+    # gated against the heuristic engine, tuned-best geomean speedup
+    # vs the static heuristic (same interleaved timing matrix) must
+    # reach 1.0x — the baseline is in the candidate space, so below
+    # 1.0 means the sweep or the timer is broken, not "slow hardware".
+    # SQUEEZE_TUNING=off pins the baseline to the true heuristic (the
+    # shipped table must not leak into the thing it is compared to).
+    "tuner": dict(
+        script="tuner_bench.py",
+        args=["--preset", "ci", "--min-speedup", "1.0",
+              "--out", "BENCH_tuner.json"],
+        env={"SQUEEZE_TUNING": "off"}, out="BENCH_tuner.json",
+        threshold=1.0, summarize=_summ_tuner),
 }
 
 

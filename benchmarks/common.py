@@ -1,11 +1,19 @@
 """Shared benchmark utilities: wall-clock timing of jitted callables and
-CSV emission (one row: name,us_per_call,derived)."""
+CSV emission (one row: name,us_per_call,derived).
+
+The autotuner's interleaved min-of-rounds timer and the gates' geomean
+live in ``repro.tuning.measure`` (the tuner must not depend on the
+benchmarks directory); they are re-exported here so every bench scores
+candidates with the same clock the tuner used.
+"""
 from __future__ import annotations
 
 import time
 from typing import Callable, Optional
 
 import jax
+
+from repro.tuning.measure import geomean, time_interleaved  # noqa: F401
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10,

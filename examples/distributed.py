@@ -23,6 +23,7 @@ from repro.core import SIERPINSKI  # noqa: E402
 from repro.core.compact import BlockLayout  # noqa: E402
 from repro.core.distributed import make_distributed_engine  # noqa: E402
 from repro.core.stencil import SqueezeBlockEngine  # noqa: E402
+from repro.tuning import EngineSpec  # noqa: E402
 from repro.workloads import GRAY_SCOTT, LIFE, BatchedRunner  # noqa: E402
 
 R, M, STEPS = 7, 2, 12
@@ -77,20 +78,21 @@ print(f"gray-scott via shard-local MXU kernel, k=2: allclose vs single "
 
 # ---- the serving runtime picks the placement -----------------------------
 # many small fractals -> batch-axis sharding (whole sims per device);
-# one big fractal -> block-axis sharding through the dist-* kinds
+# one big fractal -> block-axis sharding through the dist-* kinds.
+# Spec-first (DESIGN.md Section 11): the EngineSpec carries the kind,
+# fusion depth, exchange mode and mesh bucket in one identity.
 runner = BatchedRunner()
 mesh = jax.sharding.Mesh(np.array(jax.devices()), ("data",))
-states = runner.init_batch("dist-block", SIERPINSKI, R, seeds=range(4),
-                           m=M, workload=LIFE, mesh=mesh)
-states = runner.run("dist-block", SIERPINSKI, R, states, steps=STEPS,
-                    m=M, workload=LIFE, k=2, mesh=mesh)
+big = EngineSpec.from_args("dist-block", SIERPINSKI, R, M, LIFE,
+                           fusion_k=2, mesh=mesh)
+states = runner.init_batch(big, range(4), mesh=mesh)
+states = runner.run(big, states, STEPS, mesh=mesh)
 print(f"runner: 4 sims x {STEPS} steps, block-axis sharded, state "
       f"{tuple(states.shape)} — one batched strip exchange per fused "
       f"launch")
-small = runner.init_batch("block", SIERPINSKI, 5, seeds=range(8), m=M,
-                          workload=LIFE, mesh=mesh)
-small = runner.run("block", SIERPINSKI, 5, small, steps=STEPS, m=M,
-                   workload=LIFE)
+small_spec = EngineSpec.from_args("block", SIERPINSKI, 5, M, LIFE)
+small = runner.init_batch(small_spec, range(8), mesh=mesh)
+small = runner.run(small_spec, small, STEPS)
 print(f"runner: 8 small sims batch-axis sharded over the same mesh, "
       f"state {tuple(small.shape)}, population "
       f"{int(jnp.sum(small))}")

@@ -2,26 +2,32 @@
 and a batched runtime serving 8 concurrent simulations per workload from
 a single compiled engine.
 
+Spec-first (DESIGN.md Section 11): an ``EngineSpec`` names the
+configuration once and the runner/engine/tuning-table all key on it.
+With ``fusion_k=None`` the shipped tuning table resolves the fusion
+depth (falling back to the static heuristic off-table).
+
     PYTHONPATH=src python examples/workloads.py
 """
 import jax.numpy as jnp
 
 from repro.core import SIERPINSKI
+from repro.tuning import EngineSpec
 from repro.workloads import (GRAY_SCOTT, HEAT, HIGHLIFE, LIFE, BatchedRunner)
 
 R, M, STEPS, BATCH = 6, 2, 20, 8
 
 runner = BatchedRunner()
 for wl in (LIFE, HIGHLIFE, HEAT, GRAY_SCOTT):
-    states = runner.init_batch("block", SIERPINSKI, R, seeds=range(BATCH),
-                               m=M, workload=wl)
-    states = runner.run("block", SIERPINSKI, R, states, steps=STEPS,
-                        m=M, workload=wl)
+    spec = EngineSpec.from_args("block", SIERPINSKI, R, M, wl)
+    states = runner.init_batch(spec, range(BATCH))
+    states = runner.run(spec, states, STEPS)
     if wl.dtype == jnp.uint8:
         stat = f"mean population {float(jnp.sum(states)) / BATCH:.0f}"
     else:
         stat = f"mean field {float(jnp.mean(states)):.4f}"
-    print(f"{wl.name:>10}: {BATCH} sims x {STEPS} steps, "
+    k = runner.engine_for(spec).effective_fusion_k
+    print(f"{wl.name:>10}: {BATCH} sims x {STEPS} steps (fusion k={k}), "
           f"state {tuple(states.shape)} {jnp.dtype(wl.dtype).name}, {stat}")
 
 s = runner.stats
@@ -30,7 +36,10 @@ print(f"compiled engines built: {s.builds} (one per workload), "
 
 # the v5 MXU path: same serving surface, but the whole batch advances
 # through ONE kernel dispatched over a (B, n_macro_tiles) grid — the
-# stencil runs as banded matmuls on lane-packed macro-tiles (DESIGN 2.2)
+# stencil runs as banded matmuls on lane-packed macro-tiles (DESIGN 2.2).
+# Deliberately the LEGACY argument form: it still works (one
+# DeprecationWarning), lands in the same cache slot as the spec form,
+# and keeps the shim covered by an executable example.
 states = runner.init_batch("pallas-mxu", SIERPINSKI, R, seeds=range(BATCH),
                            m=M, workload=HEAT)
 states = runner.run("pallas-mxu", SIERPINSKI, R, states, steps=STEPS, m=M,

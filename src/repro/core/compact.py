@@ -17,7 +17,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -325,7 +325,8 @@ class BlockLayout:
         return full
 
     # -------------------------------------------- macro-tile strip geometry
-    def macro_tiles(self, k: int, lanes: int = 128) -> Tuple[int, int, int]:
+    def macro_tiles(self, k: int, lanes: int = 128,
+                    p: Optional[int] = None) -> Tuple[int, int, int]:
         """Lane-packing geometry of the v5 MXU kernel: ``(P, n_macro,
         nb_pad)`` where ``P`` compact blocks (each a depth-``k`` padded
         ``(rho+2k)``-wide slot) are packed side by side along the minor
@@ -335,18 +336,30 @@ class BlockLayout:
         ceiling split, ``P`` is rebalanced down to ``ceil(n_blocks /
         n_macro)`` so padding slots (dead lanes) are minimized. ``nb_pad =
         n_macro * P >= n_blocks``; slots past ``n_blocks`` are zero-filled
-        ghosts whose outputs are sliced off."""
-        return self.macro_tiles_for(self.n_blocks, k, lanes)
+        ghosts whose outputs are sliced off.
 
-    def macro_tiles_for(self, nb: int, k: int,
-                        lanes: int = 128) -> Tuple[int, int, int]:
+        ``p`` overrides the lane heuristic with an explicit packing (the
+        autotuner sweeps it; clamped to [1, n_blocks], no rebalance — the
+        caller asked for exactly this packing)."""
+        return self.macro_tiles_for(self.n_blocks, k, lanes, p)
+
+    def macro_tiles_for(self, nb: int, k: int, lanes: int = 128,
+                        p: Optional[int] = None) -> Tuple[int, int, int]:
         """``macro_tiles`` for an arbitrary block count ``nb`` — the
         distributed engine packs each shard's *local* blocks (nb_padded /
         n_shards of them) into their own macro-tiles, so the lane-packing
         geometry must be computable per shard, not only for the full
-        compact domain."""
+        compact domain. ``p`` overrides the lane heuristic (see
+        ``macro_tiles``)."""
         if k < 1:
             raise ValueError(f"halo depth must be >= 1, got {k}")
+        if p is not None:
+            if p < 1:
+                raise ValueError(f"macro-tile packing must be >= 1, "
+                                 f"got {p}")
+            p = min(p, nb)
+            n_macro = -(-nb // p)
+            return p, n_macro, n_macro * p
         w = self.rho + 2 * k
         p = max(1, min(lanes // w, nb))
         n_macro = -(-nb // p)
@@ -404,20 +417,25 @@ class BlockLayout:
         east = band(4, 2).swapaxes(-1, -2)   # E neighbor's west cols
         return top, bot, west, east
 
-    def existence_padded(self, k: int) -> np.ndarray:
+    def existence_padded(self, k: int,
+                         p: Optional[int] = None) -> np.ndarray:
         """(nb_pad, 8) int32 ``existence_table`` zero-padded to the macro
         slot count: padding slots have no real neighbors, so their halo
-        regions stay ghost-gated to zero in the v5 kernel."""
+        regions stay ghost-gated to zero in the v5 kernel. ``p`` is the
+        macro-tile packing override (None = lane heuristic)."""
         def build():
-            _, _, nb_pad = self.macro_tiles(k)
+            _, _, nb_pad = self.macro_tiles(k, p=p)
             pad = np.zeros((nb_pad - self.n_blocks, 8), np.int32)
             return np.concatenate([self.existence_table, pad], axis=0)
-        return self._memo(("existence_padded", k), build)
+        return self._memo(("existence_padded", k, p), build)
 
-    def dev_existence_padded(self, k: int) -> Array:
-        """Device-side ``existence_padded(k)`` (shared upload per depth)."""
-        return self._memo(("dev_existence_padded", k),
-                          lambda: self._to_device(self.existence_padded(k)))
+    def dev_existence_padded(self, k: int,
+                             p: Optional[int] = None) -> Array:
+        """Device-side ``existence_padded(k)`` (shared upload per depth
+        and packing)."""
+        return self._memo(
+            ("dev_existence_padded", k, p),
+            lambda: self._to_device(self.existence_padded(k, p)))
 
     # ------------------------------------------ locality-aware sharding
     def strip_decomposition(self, n_shards: int) -> "StripDecomposition":

@@ -23,7 +23,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -292,38 +292,53 @@ class BlockLayout3D:
         return full
 
     # -------------------------------------------- macro-tile strip geometry
-    def macro_tiles(self, k: int, lanes: int = 128) -> Tuple[int, int, int]:
+    def macro_tiles(self, k: int, lanes: int = 128,
+                    p: Optional[int] = None) -> Tuple[int, int, int]:
         """Lane-packing geometry of the 3D MXU kernel: ``(P, n_macro,
         nb_pad)`` with ``P`` blocks packed side by side along the minor
         (x/lane) axis of one macro-tile so ``P * (rho+2k)`` fills the
         vector registers — the same math as the 2D ``macro_tiles``,
-        applied to z-slab matrices of shape (rho+2k, P*(rho+2k))."""
-        return self.macro_tiles_for(self.n_blocks, k, lanes)
+        applied to z-slab matrices of shape (rho+2k, P*(rho+2k)).
+        ``p`` overrides the lane heuristic (autotuner sweep; clamped to
+        [1, n_blocks], no rebalance)."""
+        return self.macro_tiles_for(self.n_blocks, k, lanes, p)
 
-    def macro_tiles_for(self, nb: int, k: int,
-                        lanes: int = 128) -> Tuple[int, int, int]:
+    def macro_tiles_for(self, nb: int, k: int, lanes: int = 128,
+                        p: Optional[int] = None) -> Tuple[int, int, int]:
         """``macro_tiles`` for an arbitrary block count ``nb``."""
         if k < 1:
             raise ValueError(f"halo depth must be >= 1, got {k}")
+        if p is not None:
+            if p < 1:
+                raise ValueError(f"macro-tile packing must be >= 1, "
+                                 f"got {p}")
+            p = min(p, nb)
+            n_macro = -(-nb // p)
+            return p, n_macro, n_macro * p
         w = self.rho + 2 * k
         p = max(1, min(lanes // w, nb))
         n_macro = -(-nb // p)
         p = -(-nb // n_macro)  # rebalance: same tile count, fewer dead slots
         return p, n_macro, n_macro * p
 
-    def existence_padded(self, k: int) -> np.ndarray:
+    def existence_padded(self, k: int,
+                         p: Optional[int] = None) -> np.ndarray:
         """(nb_pad, 26) int32 ``existence_table`` zero-padded to the
-        macro slot count (padding slots stay ghost-gated to zero)."""
+        macro slot count (padding slots stay ghost-gated to zero).
+        ``p`` is the macro-tile packing override."""
         def build():
-            _, _, nb_pad = self.macro_tiles(k)
+            _, _, nb_pad = self.macro_tiles(k, p=p)
             pad = np.zeros((nb_pad - self.n_blocks, 26), np.int32)
             return np.concatenate([self.existence_table, pad], axis=0)
-        return self._memo(("existence_padded", k), build)
+        return self._memo(("existence_padded", k, p), build)
 
-    def dev_existence_padded(self, k: int) -> Array:
-        """Device-side ``existence_padded(k)`` (upload per depth)."""
-        return self._memo(("dev_existence_padded", k),
-                          lambda: self._to_device(self.existence_padded(k)))
+    def dev_existence_padded(self, k: int,
+                             p: Optional[int] = None) -> Array:
+        """Device-side ``existence_padded(k)`` (upload per depth and
+        packing)."""
+        return self._memo(
+            ("dev_existence_padded", k, p),
+            lambda: self._to_device(self.existence_padded(k, p)))
 
     # ------------------------------------------------------------ conversions
     def to_expanded(self, state_b: Array) -> Array:

@@ -144,6 +144,9 @@ class DistributedSqueezeEngine:
     fusion_k: Optional[int] = None
     interpret: Optional[bool] = None  # kernel computes; None = auto-detect
     exchange: str = "auto"
+    #: MXU macro-tile packing override ('mxu' compute only; applied to
+    #: each shard's local lane-packing geometry, None = lane heuristic)
+    macro_p: Optional[int] = None
 
     def __post_init__(self):
         if self.compute not in COMPUTES:
@@ -159,6 +162,10 @@ class DistributedSqueezeEngine:
                 f"distributed fusion_k must be in [1, rho="
                 f"{self.layout.rho}], got {self.fusion_k} (the strip "
                 "exchange covers one block ring)")
+        if self.macro_p is not None and self.compute != "mxu":
+            raise ValueError(
+                "macro_p only applies to the 'mxu' compute, got "
+                f"compute={self.compute!r}")
         self.layout.materialize()
         if self.exchange == "p2p" and not self.decomp.valid:
             raise ValueError(
@@ -537,7 +544,8 @@ class DistributedSqueezeEngine:
             else:
                 sizes = {self.nb_local}
             for n_sel in sizes:
-                p_local = layout.macro_tiles_for(n_sel, k)[0]
+                p_local = layout.macro_tiles_for(n_sel, k,
+                                                 p=self.macro_p)[0]
                 _mxu_operators(self.workload, layout.rho + 2 * k, p_local)
 
     # ---------------------------------------------------- shard-local compute
@@ -556,7 +564,7 @@ class DistributedSqueezeEngine:
                 stencil_step_mxu_k_local)
             out = stencil_step_mxu_k_local(
                 layout, states, halo, existence, self.workload, k=k,
-                interpret=self.interpret)
+                p=self.macro_p, interpret=self.interpret)
         elif self.compute == "fused":
             from repro.kernels.squeeze_stencil import (
                 stencil_step_fused_k_local)
@@ -814,11 +822,13 @@ def make_distributed_engine(layout: BlockLayout, mesh: Optional[Mesh] = None,
                             compute: str = "jnp",
                             fusion_k: Optional[int] = None,
                             interpret: Optional[bool] = None,
-                            exchange: str = "auto"
+                            exchange: str = "auto",
+                            macro_p: Optional[int] = None
                             ) -> DistributedSqueezeEngine:
     """Engine over ``mesh`` (default: all devices on one "data" axis)."""
     if mesh is None:
         mesh = Mesh(jax.devices(), ("data",))
         axis = "data"
     return DistributedSqueezeEngine(layout, mesh, axis, workload, compute,
-                                    fusion_k, interpret, exchange)
+                                    fusion_k, interpret, exchange,
+                                    macro_p=macro_p)

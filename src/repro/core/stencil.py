@@ -29,6 +29,7 @@ to XLA (zero-copy steady-state stepping).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Optional
 
@@ -304,6 +305,9 @@ class SqueezePallasEngine(_FusedStepping):
     workload: StencilWorkload = LIFE
     variant: str = "strips"
     fusion_k: Optional[int] = None
+    #: MXU macro-tile packing override (blocks per macro-tile; 'mxu'
+    #: variant only, None = lane heuristic)
+    macro_p: Optional[int] = None
 
     def __post_init__(self):
         if self.variant not in ("blocks", "strips", "fused", "mxu"):
@@ -314,6 +318,10 @@ class SqueezePallasEngine(_FusedStepping):
             raise ValueError(
                 f"pallas fusion_k must be in [1, rho={self.layout.rho}], "
                 f"got {self.fusion_k}")
+        if self.macro_p is not None and self.variant != "mxu":
+            raise ValueError(
+                "macro_p only applies to the 'mxu' variant, got "
+                f"variant={self.variant!r}")
         self.layout.materialize()
 
     @property
@@ -333,10 +341,12 @@ class SqueezePallasEngine(_FusedStepping):
 
     def step(self, state: Array) -> Array:
         from repro.kernels import ops
+        if self.variant == "mxu":
+            return ops.stencil_step_mxu(self.layout, state, self.workload,
+                                        p=self.macro_p)
         fn = {"blocks": ops.stencil_step_blocks,
               "strips": ops.stencil_step_strips,
-              "fused": ops.stencil_step_fused,
-              "mxu": ops.stencil_step_mxu}[self.variant]
+              "fused": ops.stencil_step_fused}[self.variant]
         return fn(self.layout, state, self.workload)
 
     # ------------------------------------------------------- native batching
@@ -360,7 +370,8 @@ class SqueezePallasEngine(_FusedStepping):
                 "(use jax.vmap over step/step_k instead)")
         from repro.kernels import ops
         return ops.stencil_step_mxu_batched(self.layout, states,
-                                            self.workload, k=k)
+                                            self.workload, k=k,
+                                            p=self.macro_p)
 
     # ------------------------------------------------------ temporal fusion
     def _materialize_fused(self, k: int) -> None:
@@ -368,7 +379,10 @@ class SqueezePallasEngine(_FusedStepping):
         # halo_mask/offset_table (O(n_blocks (rho+2k)^2) host build)
         _ = self.layout.dev_existence_table, self.layout.dev_window_mask(k)
         if self.variant == "mxu":
-            _ = self.layout.dev_existence_padded(k)
+            # resolve the packing override to its concrete P — the same
+            # memo key the kernel wrapper uses
+            p = self.layout.macro_tiles(k, p=self.macro_p)[0]
+            _ = self.layout.dev_existence_padded(k, p=p)
 
     def step_k(self, state: Array, k: int) -> Array:
         """Advance ``k`` exact steps in one fused kernel launch (k <= rho):
@@ -376,7 +390,7 @@ class SqueezePallasEngine(_FusedStepping):
         from repro.kernels import ops
         if self.variant == "mxu":
             return ops.stencil_step_mxu_k(self.layout, state, self.workload,
-                                          k=k)
+                                          k=k, p=self.macro_p)
         return ops.stencil_step_fused_k(self.layout, state, self.workload,
                                         k=k)
 
@@ -388,12 +402,30 @@ class SqueezePallasEngine(_FusedStepping):
 _DIST_KINDS = {"dist-block": "jnp", "dist-fused": "fused",
                "dist-mxu": "mxu"}
 
+#: sentinel: "normalize against the active default tuning table"
+_UNSET_TABLE = object()
 
-def make_engine(kind: str, frac, r: int, m: int = 0,
-                workload: StencilWorkload = LIFE,
+
+def make_engine(kind, frac=None, r: Optional[int] = None, m: int = 0,
+                workload: Optional[StencilWorkload] = None,
                 fusion_k: Optional[int] = None, mesh=None,
-                axis: str = "data", exchange: str = "auto"):
-    """Engine factory.
+                axis: str = "data", exchange: str = "auto",
+                macro_p: Optional[int] = None, table=_UNSET_TABLE):
+    """Engine factory. Primary form: ``make_engine(spec)`` with an
+    :class:`repro.tuning.spec.EngineSpec` — the canonical configuration
+    identity. The spec is ``normalize()``d first (alias rewrite, knob
+    zeroing, and tunable-knob resolution: explicit argument > tuning-
+    table hit > static heuristic — see DESIGN.md Section 11), so the
+    engine's kind/fusion depth/macro-tile packing/exchange mode are the
+    resolved values. Registry fractals/workloads and the mesh are
+    reconstructed from the spec; pass ``frac=``/``workload=``/``mesh=``
+    objects to supply custom ones (they must match the spec's
+    identity). ``table=None`` pins normalization to the static
+    heuristics (no tuning-table consult).
+
+    Legacy form: ``make_engine(kind, frac, r, m=..., ...)`` with a kind
+    string and a fractal object still works — it constructs the spec
+    internally and emits a ``DeprecationWarning``.
 
     kind: 'bb' | 'lambda' | 'cell' | 'block' | 'pallas-blocks' |
           'pallas-strips' | 'pallas-fused' | 'pallas-mxu' |
@@ -402,12 +434,15 @@ def make_engine(kind: str, frac, r: int, m: int = 0,
           ('pallas' = 'pallas-strips', 'pallas-3d' = the fused 3D
           kernel).
     ``m`` (block level, rho = s**m) and ``fusion_k`` (temporal-fusion
-    depth for ``run``; None = heuristic) only apply to the block/pallas/
-    dist kinds — the expanded-space and cell engines have no block tiles
-    to fuse over. 'pallas-mxu' is the v5 stencil-as-matmul kernel: the
-    Moore aggregation runs as rank-1 banded MXU contractions on
-    lane-packed multi-block macro-tiles with a *native* batch grid
-    (``step_batched``) — see DESIGN.md Section 2.2.
+    depth for ``run``; None = table-then-heuristic) only apply to the
+    block/pallas/dist kinds — the expanded-space and cell engines have
+    no block tiles to fuse over. ``macro_p`` overrides the MXU
+    macro-tile packing (lane-packed blocks per macro-tile; MXU kinds
+    only, None = table-then-lane-heuristic). 'pallas-mxu' is the v5
+    stencil-as-matmul kernel: the Moore aggregation runs as rank-1
+    banded MXU contractions on lane-packed multi-block macro-tiles with
+    a *native* batch grid (``step_batched``) — see DESIGN.md Section
+    2.2.
 
     The 'dist-*' kinds are the multi-device engine of
     ``core/distributed.py``: the compact block domain sharded over
@@ -429,28 +464,51 @@ def make_engine(kind: str, frac, r: int, m: int = 0,
 
     With telemetry enabled, every build counts ``engine.builds`` and
     sets the ``engine.memory_bytes`` gauge (compact-state footprint at
-    the workload dtype), both labeled by ``kind``.
+    the workload dtype), both labeled by the *normalized* kind (so
+    'pallas' callers and runner users agree on the label).
     """
-    engine = _make_engine(kind, frac, r, m, workload, fusion_k, mesh,
-                          axis, exchange)
+    from repro.tuning.spec import EngineSpec
+    if isinstance(kind, EngineSpec):
+        spec = kind
+    else:
+        warnings.warn(
+            "make_engine(kind, frac, r, ...) with a kind string is "
+            "deprecated; build an EngineSpec and call make_engine(spec) "
+            "(see DESIGN.md Section 11)",
+            DeprecationWarning, stacklevel=2)
+        if frac is None or r is None:
+            raise TypeError(
+                "legacy make_engine(kind, frac, r, ...) needs a fractal "
+                "object and r")
+        spec = EngineSpec.from_args(kind, frac, r, m, workload, fusion_k,
+                                    macro_p, mesh, axis, exchange)
+    norm = spec.normalize() if table is _UNSET_TABLE \
+        else spec.normalize(table=table)
+    frac_obj = frac if frac is not None else norm.build_frac()
+    workload_obj = workload if workload is not None \
+        else norm.build_workload()
+    mesh_obj = mesh if mesh is not None else norm.build_mesh()
+    engine = _make_engine(norm, frac_obj, workload_obj, mesh_obj)
     if obs.enabled():
-        obs.inc("engine.builds", kind=kind)
+        obs.inc("engine.builds", kind=norm.kind)
         if hasattr(engine, "memory_bytes"):
             try:
-                itemsize = jnp.dtype(workload.dtype).itemsize
+                itemsize = jnp.dtype(workload_obj.dtype).itemsize
                 obs.set_gauge("engine.memory_bytes",
                               engine.memory_bytes(dtype_size=itemsize),
-                              kind=kind)
+                              kind=norm.kind)
             except TypeError:  # engines with a fixed internal dtype
                 obs.set_gauge("engine.memory_bytes",
-                              engine.memory_bytes(), kind=kind)
+                              engine.memory_bytes(), kind=norm.kind)
     return engine
 
 
-def _make_engine(kind: str, frac, r: int, m: int,
-                 workload: StencilWorkload, fusion_k: Optional[int],
-                 mesh, axis: str, exchange: str = "auto"):
+def _make_engine(spec, frac, workload, mesh):
+    """Dispatch a *normalized* EngineSpec plus the resolved fractal/
+    workload/mesh objects to the engine classes."""
     from repro.core.baselines import LambdaEngine
+    kind, r, m = spec.kind, spec.r, spec.m
+    fusion_k, macro_p = spec.fusion_k, spec.macro_p
     if kind in ("bb3d", "cell3d", "block3d") or kind.startswith("pallas-3d"):
         from repro.core import stencil3d as s3
         from repro.core.compact3d import BlockLayout3D
@@ -464,7 +522,8 @@ def _make_engine(kind: str, frac, r: int, m: int,
         variant = kind[len("pallas-3d"):].lstrip("-") or "fused"
         return s3.Squeeze3DPallasEngine(BlockLayout3D(frac, r, m),
                                         workload, variant=variant,
-                                        fusion_k=fusion_k)
+                                        fusion_k=fusion_k,
+                                        macro_p=macro_p)
     if kind == "bb":
         return BBEngine(frac, r, workload)
     if kind == "lambda":
@@ -477,13 +536,12 @@ def _make_engine(kind: str, frac, r: int, m: int,
     if kind in _DIST_KINDS:
         from repro.core.distributed import make_distributed_engine
         return make_distributed_engine(
-            BlockLayout(frac, r, m), mesh=mesh, axis=axis,
+            BlockLayout(frac, r, m), mesh=mesh, axis=spec.axis,
             workload=workload, compute=_DIST_KINDS[kind],
-            fusion_k=fusion_k, exchange=exchange)
-    if kind == "pallas":
-        kind = "pallas-strips"
+            fusion_k=fusion_k, exchange=spec.exchange,
+            macro_p=macro_p)
     if kind.startswith("pallas-"):
         return SqueezePallasEngine(BlockLayout(frac, r, m), workload,
                                    variant=kind[len("pallas-"):],
-                                   fusion_k=fusion_k)
+                                   fusion_k=fusion_k, macro_p=macro_p)
     raise ValueError(f"unknown engine kind {kind!r}")

@@ -250,6 +250,9 @@ class Squeeze3DPallasEngine(_FusedStepping):
     workload: StencilWorkload = LIFE3D
     variant: str = "fused"
     fusion_k: Optional[int] = None
+    #: MXU macro-tile packing override ('mxu' variant only, None = lane
+    #: heuristic)
+    macro_p: Optional[int] = None
 
     def __post_init__(self):
         if self.variant not in ("fused", "mxu"):
@@ -260,6 +263,10 @@ class Squeeze3DPallasEngine(_FusedStepping):
             raise ValueError(
                 f"pallas fusion_k must be in [1, rho={self.layout.rho}], "
                 f"got {self.fusion_k}")
+        if self.macro_p is not None and self.variant != "mxu":
+            raise ValueError(
+                "macro_p only applies to the 'mxu' variant, got "
+                f"variant={self.variant!r}")
         self.layout.materialize()
 
     @property
@@ -288,7 +295,8 @@ class Squeeze3DPallasEngine(_FusedStepping):
             _ = self.layout.dev_existence_table
             _ = self.layout.dev_window_mask(kk)
             if self.variant == "mxu":
-                _ = self.layout.dev_existence_padded(kk)
+                p = self.layout.macro_tiles(kk, p=self.macro_p)[0]
+                _ = self.layout.dev_existence_padded(kk, p=p)
 
     def step_k(self, state: Array, k: int) -> Array:
         """Advance ``k`` exact steps in one fused kernel launch
@@ -296,7 +304,8 @@ class Squeeze3DPallasEngine(_FusedStepping):
         from repro.kernels import squeeze_stencil3d as k3
         if self.variant == "mxu":
             return k3.stencil3d_step_mxu_k(self.layout, state,
-                                           self.workload, k=k)
+                                           self.workload, k=k,
+                                           p=self.macro_p)
         return k3.stencil3d_step_fused_k(self.layout, state, self.workload,
                                          k=k)
 

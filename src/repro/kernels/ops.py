@@ -76,30 +76,37 @@ def stencil_step_fused_k(layout: BlockLayout, state, workload=LIFE, *,
 
 
 def stencil_step_mxu(layout: BlockLayout, state, workload=LIFE, *,
+                     p: Optional[int] = None,
                      interpret: Optional[bool] = None):
     """Fused block-level workload step, v5 (MXU stencil-as-matmul on
-    lane-packed macro-tiles)."""
+    lane-packed macro-tiles). ``p`` overrides the macro-tile packing
+    (blocks per macro-tile; None = lane heuristic — the autotuner
+    persists per-config winners)."""
     obs.inc("kernel.entry", op="stencil_step_mxu")
-    return _stencil.stencil_step_mxu(layout, state, workload,
+    return _stencil.stencil_step_mxu(layout, state, workload, p=p,
                                      interpret=interpret)
 
 
 def stencil_step_mxu_k(layout: BlockLayout, state, workload=LIFE, *,
-                       k: int = 2, interpret: Optional[bool] = None):
+                       k: int = 2, p: Optional[int] = None,
+                       interpret: Optional[bool] = None):
     """Fused block-level workload step, v5 temporal fusion: k exact steps
-    per MXU macro-tile launch (k <= rho)."""
+    per MXU macro-tile launch (k <= rho). ``p`` overrides the macro-tile
+    packing (None = lane heuristic)."""
     obs.inc("kernel.entry", op="stencil_step_mxu_k")
-    return _stencil.stencil_step_mxu_k(layout, state, workload, k=k,
+    return _stencil.stencil_step_mxu_k(layout, state, workload, k=k, p=p,
                                        interpret=interpret)
 
 
 def stencil_step_mxu_batched(layout: BlockLayout, states, workload=LIFE, *,
-                             k: int = 1, interpret: Optional[bool] = None):
+                             k: int = 1, p: Optional[int] = None,
+                             interpret: Optional[bool] = None):
     """v5 native batch grid: B simulations x k exact steps in one kernel
-    dispatch over (B, n_macro_tiles); states (B, C?, n_blocks, rho, rho)."""
+    dispatch over (B, n_macro_tiles); states (B, C?, n_blocks, rho, rho).
+    ``p`` overrides the macro-tile packing (None = lane heuristic)."""
     obs.inc("kernel.entry", op="stencil_step_mxu_batched")
     return _stencil.stencil_step_mxu_batched(layout, states, workload, k=k,
-                                             interpret=interpret)
+                                             p=p, interpret=interpret)
 
 
 def stencil3d_step_fused_k(layout, state, workload=None, *, k: int = 2,
@@ -116,15 +123,17 @@ def stencil3d_step_fused_k(layout, state, workload=None, *, k: int = 2,
 
 
 def stencil3d_step_mxu_k(layout, state, workload=None, *, k: int = 1,
+                         p: Optional[int] = None,
                          interpret: Optional[bool] = None):
     """Fused 3D block-level workload step (v5-style MXU): the 26-cell
     aggregation as banded matmuls per z-slab on lane-packed macro-tiles.
-    ``layout`` is a ``compact3d.BlockLayout3D``; k <= rho."""
+    ``layout`` is a ``compact3d.BlockLayout3D``; k <= rho. ``p``
+    overrides the macro-tile packing (None = lane heuristic)."""
     obs.inc("kernel.entry", op="stencil3d_step_mxu_k")
     from repro.kernels import squeeze_stencil3d as _s3
     from repro.workloads.rules import LIFE3D
     return _s3.stencil3d_step_mxu_k(
-        layout, state, LIFE3D if workload is None else workload, k=k,
+        layout, state, LIFE3D if workload is None else workload, k=k, p=p,
         interpret=interpret)
 
 

@@ -619,6 +619,7 @@ def _pack_macro(arr: jnp.ndarray, nb: int, p: int, n_macro: int):
 
 def stencil_step_mxu_batched(layout: BlockLayout, states: jnp.ndarray,
                              workload: StencilWorkload = LIFE, *, k: int = 1,
+                             p: Optional[int] = None,
                              interpret: Optional[bool] = None) -> jnp.ndarray:
     """v5, native batch grid: advance B independent simulations ``k`` exact
     steps in ONE kernel dispatch over a (B, n_macro) grid.
@@ -628,7 +629,9 @@ def stencil_step_mxu_batched(layout: BlockLayout, states: jnp.ndarray,
     blocks lane-packed per program, P*(rho+2k) ~ 128 lanes); the
     scalar-prefetched existence table is shared across the whole batch
     instead of being re-staged per simulation by a vmap of pallas_call.
-    Requires k <= rho (one block ring, as v4).
+    Requires k <= rho (one block ring, as v4). ``p`` overrides the
+    macro-tile packing P (None = the ``macro_tiles`` lane heuristic; the
+    autotuner sweeps explicit values).
     """
     if k < 1:
         raise ValueError(f"need k >= 1, got k={k}")
@@ -636,23 +639,28 @@ def stencil_step_mxu_batched(layout: BlockLayout, states: jnp.ndarray,
         raise ValueError(
             f"mxu kernel needs k <= rho, got k={k} > rho={layout.rho} "
             "(use SqueezeBlockEngine.step_k for deeper-than-one-block halos)")
-    # static geometry + operators built outside the trace
+    # static geometry + operators built outside the trace; the packing
+    # override is resolved to its concrete P here so the jit cache and
+    # the layout memos key on one value (explicit P equal to the lane
+    # heuristic's choice shares the compiled kernel)
+    p = layout.macro_tiles(k, p=p)[0]
     layout.materialize()
-    _ = layout.dev_existence_padded(k), layout.dev_window_mask(k)
-    _ = _mxu_operators(workload, layout.rho + 2 * k,
-                       layout.macro_tiles(k)[0])
-    return _stencil_step_mxu_batched(layout, states, workload, k,
+    _ = layout.dev_existence_padded(k, p=p), layout.dev_window_mask(k)
+    _ = _mxu_operators(workload, layout.rho + 2 * k, p)
+    return _stencil_step_mxu_batched(layout, states, workload, k, p,
                                      interpret=resolve_interpret(interpret))
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("layout", "workload", "k", "interpret"))
+                   static_argnames=("layout", "workload", "k", "p",
+                                    "interpret"))
 def _stencil_step_mxu_batched(layout: BlockLayout, states: jnp.ndarray,
-                              workload: StencilWorkload, k: int, *,
+                              workload: StencilWorkload, k: int,
+                              p: Optional[int] = None, *,
                               interpret: bool) -> jnp.ndarray:
     rho, nb = layout.rho, layout.n_blocks
     w = rho + 2 * k
-    p, n_macro, _ = layout.macro_tiles(k)
+    p, n_macro, _ = layout.macro_tiles(k, p=p)
     chan = workload.n_channels > 1
     s = states if chan else states[:, None]  # (B, C, nb, rho, rho)
     b, nc = s.shape[0], s.shape[1]
@@ -693,7 +701,7 @@ def _stencil_step_mxu_batched(layout: BlockLayout, states: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((b, nc, n_macro, rho, p * rho),
                                        workload.dtype),
         interpret=interpret,
-    )(layout.dev_existence_padded(k), cm, topm, botm, westm, eastm,
+    )(layout.dev_existence_padded(k, p=p), cm, topm, botm, westm, eastm,
       layout.dev_window_mask(k), jnp.asarray(rm), jnp.asarray(ct))
     out = out.reshape(b, nc, n_macro, rho, p, rho).transpose(0, 1, 2, 4, 3, 5)
     out = out.reshape(b, nc, n_macro * p, rho, rho)[:, :, :nb]
@@ -702,20 +710,24 @@ def _stencil_step_mxu_batched(layout: BlockLayout, states: jnp.ndarray,
 
 def stencil_step_mxu(layout: BlockLayout, state: jnp.ndarray,
                      workload: StencilWorkload = LIFE, *,
+                     p: Optional[int] = None,
                      interpret: Optional[bool] = None) -> jnp.ndarray:
     """One workload step, v5 (MXU stencil-as-matmul on lane-packed
-    macro-tiles); state (C?, n_blocks, rho, rho) -> same."""
+    macro-tiles); state (C?, n_blocks, rho, rho) -> same. ``p``
+    overrides the macro-tile packing (None = lane heuristic)."""
     return stencil_step_mxu_batched(layout, state[None], workload, k=1,
-                                    interpret=interpret)[0]
+                                    p=p, interpret=interpret)[0]
 
 
 def stencil_step_mxu_k(layout: BlockLayout, state: jnp.ndarray,
                        workload: StencilWorkload = LIFE, *, k: int = 2,
+                       p: Optional[int] = None,
                        interpret: Optional[bool] = None) -> jnp.ndarray:
     """v5 temporal fusion: k exact steps in one MXU macro-tile launch,
-    reusing the v4 mask discipline (k <= rho)."""
+    reusing the v4 mask discipline (k <= rho). ``p`` overrides the
+    macro-tile packing (None = lane heuristic)."""
     return stencil_step_mxu_batched(layout, state[None], workload, k=k,
-                                    interpret=interpret)[0]
+                                    p=p, interpret=interpret)[0]
 
 
 # ======================================================================
@@ -768,6 +780,7 @@ def stencil_step_fused_k_local(layout: BlockLayout, state: jnp.ndarray,
 def stencil_step_mxu_k_local(layout: BlockLayout, states: jnp.ndarray,
                              halo, existence: jnp.ndarray,
                              workload: StencilWorkload, *, k: int,
+                             p: Optional[int] = None,
                              interpret: Optional[bool] = None
                              ) -> jnp.ndarray:
     """Shard-local v5: ``k`` MXU macro-tile substeps of B simulations over
@@ -777,12 +790,13 @@ def stencil_step_mxu_k_local(layout: BlockLayout, states: jnp.ndarray,
     leading axes; ``existence`` (nbl, 8) as in the v4 local entry. The
     local blocks are lane-packed with ``macro_tiles_for(nbl, k)`` — each
     shard gets its own macro-tile geometry, sharing the kernel body,
-    window mask and MXU operators with the single-device v5 path.
+    window mask and MXU operators with the single-device v5 path. ``p``
+    overrides the per-shard packing (None = lane heuristic).
     """
     rho = layout.rho
     b, nc, nbl = states.shape[0], states.shape[1], states.shape[2]
     w = rho + 2 * k
-    p, n_macro, nb_pad = layout.macro_tiles_for(nbl, k)
+    p, n_macro, nb_pad = layout.macro_tiles_for(nbl, k, p=p)
     top, bot, west, east = halo
 
     def pack(arr):  # (B, C, nbl, h, cols) -> (B, C, n_macro, h, P*cols)

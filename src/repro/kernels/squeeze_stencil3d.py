@@ -297,32 +297,38 @@ def _pack_macro3(arr: jnp.ndarray, nb: int, p: int, n_macro: int):
 
 def stencil3d_step_mxu_k(layout: BlockLayout3D, state: jnp.ndarray,
                          workload: StencilWorkload = LIFE3D, *, k: int = 1,
+                         p: Optional[int] = None,
                          interpret: Optional[bool] = None) -> jnp.ndarray:
     """v5-style 3D MXU step: ``k`` exact steps in one macro-tile launch
     whose 26-neighbor aggregation runs as banded matmuls per z-slab
-    (k <= rho). state (n_blocks, rho, rho, rho) -> same."""
+    (k <= rho). state (n_blocks, rho, rho, rho) -> same. ``p`` overrides
+    the macro-tile packing P (None = lane heuristic)."""
     if k < 1:
         raise ValueError(f"need k >= 1, got k={k}")
     if k > layout.rho:
         raise ValueError(
             f"mxu 3D kernel needs k <= rho, got k={k} > rho={layout.rho} "
             "(use Squeeze3DBlockEngine.step_k for deeper halos)")
+    # resolve the packing override to its concrete P so the jit cache
+    # and the layout memos key on one value
+    p = layout.macro_tiles(k, p=p)[0]
     layout.materialize()
-    _ = layout.dev_existence_padded(k), layout.dev_window_mask(k)
-    _ = _mxu3_operators(workload, layout.rho + 2 * k,
-                        layout.macro_tiles(k)[0])
-    return _stencil3d_step_mxu_k(layout, state, workload, k,
+    _ = layout.dev_existence_padded(k, p=p), layout.dev_window_mask(k)
+    _ = _mxu3_operators(workload, layout.rho + 2 * k, p)
+    return _stencil3d_step_mxu_k(layout, state, workload, k, p,
                                  interpret=resolve_interpret(interpret))
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("layout", "workload", "k", "interpret"))
+                   static_argnames=("layout", "workload", "k", "p",
+                                    "interpret"))
 def _stencil3d_step_mxu_k(layout: BlockLayout3D, state: jnp.ndarray,
-                          workload: StencilWorkload, k: int, *,
+                          workload: StencilWorkload, k: int,
+                          p: Optional[int] = None, *,
                           interpret: bool) -> jnp.ndarray:
     rho, nb = layout.rho, layout.n_blocks
     w = rho + 2 * k
-    p, n_macro, _ = layout.macro_tiles(k)
+    p, n_macro, _ = layout.macro_tiles(k, p=p)
     s = state[None]
     pieces = _gather_halo3_k(layout, s, k)
 
@@ -359,7 +365,8 @@ def _stencil3d_step_mxu_k(layout: BlockLayout3D, state: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((1, n_macro, rho, rho, p * rho),
                                        workload.dtype),
         interpret=interpret,
-    )(layout.dev_existence_padded(k), cm, zlom, zhim, ylom, yhim, xlom,
-      xhim, layout.dev_window_mask(k), jnp.asarray(rm), jnp.asarray(ct))
+    )(layout.dev_existence_padded(k, p=p), cm, zlom, zhim, ylom, yhim,
+      xlom, xhim, layout.dev_window_mask(k), jnp.asarray(rm),
+      jnp.asarray(ct))
     out = out.reshape(n_macro, rho, rho, p, rho).transpose(0, 3, 1, 2, 4)
     return out.reshape(n_macro * p, rho, rho, rho)[:nb]

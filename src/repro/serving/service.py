@@ -265,17 +265,26 @@ class FractalService:
         return cb
 
     # ---------------------------------------------------------- bucket loop
-    async def _run_bucket(self, bucket: Tuple) -> None:
-        kind, frac, r, m, workload, k = bucket
+    async def _run_bucket(self, bucket) -> None:
+        # the bucket IS the normalized EngineSpec — the runner accepts
+        # it directly; a representative request supplies the live
+        # frac/workload objects (registry-invisible customs included)
+        q0 = self._pending.get(bucket)
+        if not q0:
+            return  # shed between scheduling and task start
+        rep = q0[0].req
+        kind = bucket.kind
         cfg = self.config
         run_in = self._loop.run_in_executor
 
         # bounded cold compile: only misses pay the semaphore
-        if not self.runner.is_cached(kind, frac, r, m, workload, k):
+        if not self.runner.is_cached(bucket, frac=rep.frac,
+                                     workload=rep.workload):
             async with self._compile_sem:
                 await run_in(self._executor,
                              lambda: self.runner.engine_for(
-                                 kind, frac, r, m, workload, k))
+                                 bucket, frac=rep.frac,
+                                 workload=rep.workload))
 
         rows: List[_Row] = []
         attempt = 0                      # failures since last success
@@ -344,8 +353,9 @@ class FractalService:
             def work(states=states, seg=seg, seg_idx=seg_idx):
                 if self.injector is not None:
                     self.injector.in_step(seg_idx)
-                out = self.runner.run(kind, frac, r, states, seg, m=m,
-                                      workload=workload, k=k,
+                out = self.runner.run(bucket, states=states, steps=seg,
+                                      frac=rep.frac,
+                                      workload=rep.workload,
                                       donate=True)
                 return jax.block_until_ready(out)
 
@@ -365,7 +375,8 @@ class FractalService:
                 # compiled engine, recover the batch from checkpoints
                 self.watchdog.flag_hang()
                 obs.inc("serve.restarts", kind=kind)
-                self.runner.invalidate(kind, frac, r, m, workload, k)
+                self.runner.invalidate(bucket, frac=rep.frac,
+                                       workload=rep.workload)
                 warm.clear()  # the restarted engine recompiles
                 t_fail = t_fail or time.monotonic()
                 attempt += 1
@@ -448,8 +459,8 @@ class FractalService:
             keep=self.config.keep_checkpoints)
 
     def _engine_of(self, req: SimRequest):
-        return self.runner.engine_for(req.kind, req.frac, req.r, req.m,
-                                      req.workload, req.k)
+        return self.runner.engine_for(req.bucket, frac=req.frac,
+                                      workload=req.workload)
 
     @staticmethod
     def _is_dist(req: SimRequest) -> bool:
@@ -579,7 +590,7 @@ class FractalService:
             else:
                 self._loop.call_soon_threadsafe(do)
 
-    def _shed_bucket(self, bucket: Tuple, status: str,
+    def _shed_bucket(self, bucket, status: str,
                      error: Optional[str] = None) -> None:
         q = self._pending.get(bucket)
         while q:

@@ -9,10 +9,13 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
-from typing import Any, Hashable, List, Optional, Tuple
+from typing import TYPE_CHECKING, Any, Hashable, List, Optional, Tuple
 
 from repro.workloads.base import StencilWorkload
 from repro.workloads.rules import LIFE
+
+if TYPE_CHECKING:  # annotation-only; keeps import time jax-free
+    from repro.tuning.spec import EngineSpec
 
 _RIDS = itertools.count()
 
@@ -51,11 +54,24 @@ class SimRequest:
             raise ValueError("snapshot_every must be >= 0")
 
     @property
-    def bucket(self) -> Tuple:
-        """Engine-compatibility key: requests sharing it batch into one
-        compiled entry (the BatchedRunner LRU's warm path)."""
-        return (self.kind, self.frac, self.r, self.m, self.workload,
-                self.k)
+    def bucket(self) -> "EngineSpec":
+        """Engine-compatibility key: the NORMALIZED
+        :class:`repro.tuning.spec.EngineSpec` of this request — the
+        same object the BatchedRunner LRU and the tuning table key on,
+        so requests batch together exactly when they would share one
+        compiled entry (alias kinds, an explicit ``k`` equal to the
+        resolved default, etc. all collapse). Computed once per request
+        (the tuning-table consult and its ``engine.tune.*`` telemetry
+        fire on first access); mutating the identity fields afterwards
+        does not re-bucket."""
+        b = self.__dict__.get("_bucket")
+        if b is None:
+            from repro.tuning.spec import EngineSpec
+            b = EngineSpec.from_args(
+                self.kind, self.frac, self.r, self.m, self.workload,
+                fusion_k=self.k).normalize()
+            self.__dict__["_bucket"] = b
+        return b
 
 
 @dataclasses.dataclass

@@ -1,0 +1,32 @@
+"""Autotuner subsystem: EngineSpec identity, tuning tables, search.
+
+``EngineSpec`` is the single configuration identity used across the
+stack (engine construction, runner cache keys, serving buckets, tuning
+table keys); ``normalize()`` resolves its tunable knobs via
+
+    explicit argument > tuning-table hit > static heuristic.
+
+See DESIGN.md Section 11 and ``python -m repro.tuning --help``.
+"""
+from repro.tuning.measure import (geomean, roofline_step_seconds,
+                                  time_interleaved)
+from repro.tuning.presets import preset_specs
+from repro.tuning.search import (Candidate, TuneResult, candidate_space,
+                                 tune_many, tune_spec)
+from repro.tuning.spec import KIND_ALIASES, KINDS, EngineSpec
+from repro.tuning.table import (DEFAULT_TABLE_PATH, TABLE_VERSION,
+                                TableEntry, TuningTable, consult,
+                                default_table,
+                                reset_default_table_cache,
+                                tuning_enabled)
+
+__all__ = [
+    "EngineSpec", "KINDS", "KIND_ALIASES",
+    "TuningTable", "TableEntry", "TABLE_VERSION", "DEFAULT_TABLE_PATH",
+    "consult", "default_table", "reset_default_table_cache",
+    "tuning_enabled",
+    "tune_spec", "tune_many", "candidate_space", "Candidate",
+    "TuneResult",
+    "time_interleaved", "geomean", "roofline_step_seconds",
+    "preset_specs",
+]

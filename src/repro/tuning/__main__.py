@@ -1,0 +1,116 @@
+"""``python -m repro.tuning`` — re-tune, inspect, and diff tables.
+
+Subcommands:
+
+* ``tune``  — run the sweep for a preset (or explicit spec JSON) and
+  write the winners to a table file, printing the diff against the
+  table previously at that path;
+* ``show``  — print a table (default: the shipped one);
+* ``diff``  — key-level diff of two table files.
+
+Examples::
+
+    python -m repro.tuning tune --preset default \
+        --out src/repro/tuning/tables/default.json
+    python -m repro.tuning tune --spec '{"kind":"block","s":2,...}'
+    python -m repro.tuning diff old.json new.json
+    python -m repro.tuning show
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.tuning.presets import preset_specs
+from repro.tuning.search import tune_many
+from repro.tuning.spec import EngineSpec
+from repro.tuning.table import DEFAULT_TABLE_PATH, TuningTable
+
+
+def _cmd_tune(args: argparse.Namespace) -> int:
+    specs = []
+    if args.preset:
+        specs += preset_specs(args.preset)
+    for raw in args.spec or []:
+        specs.append(EngineSpec.from_json(json.loads(raw)))
+    if not specs:
+        print("nothing to tune: pass --preset and/or --spec",
+              file=sys.stderr)
+        return 2
+    old = None
+    if args.out and os.path.exists(args.out):
+        old = TuningTable.load(args.out)
+    base = TuningTable(old.entries) if (old and args.merge) else None
+    table, results = tune_many(
+        specs, steps=args.steps, rounds=args.rounds, seed=args.seed,
+        max_candidates=args.max_candidates, table=base)
+    for res in results:
+        mark = " [SUSPECT]" if res.suspect else ""
+        print(f"{res.spec.tuning_key()}\n    best={res.best.label} "
+              f"baseline={res.baseline.label} "
+              f"speedup={res.speedup:.2f}x{mark}")
+        if res.parity_failures:
+            print(f"    parity failures: {res.parity_failures}")
+    if args.out:
+        table.meta.setdefault("generator", "python -m repro.tuning")
+        table.save(args.out)
+        print(f"wrote {len(table)} entries to {args.out}")
+        if old is not None:
+            print(json.dumps(table.diff(old), indent=2))
+    else:
+        print(json.dumps(table.to_json(), indent=2))
+    return 0
+
+
+def _cmd_show(args: argparse.Namespace) -> int:
+    table = TuningTable.load(args.path)
+    print(json.dumps(table.to_json(), indent=2))
+    return 0
+
+
+def _cmd_diff(args: argparse.Namespace) -> int:
+    old = TuningTable.load(args.old)
+    new = TuningTable.load(args.new)
+    diff = new.diff(old)
+    print(json.dumps(diff, indent=2))
+    return 1 if (diff["added"] or diff["removed"] or diff["changed"]) \
+        else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.tuning",
+                                 description=__doc__.split("\n\n")[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    t = sub.add_parser("tune", help="run the sweep and write a table")
+    t.add_argument("--preset", choices=["ci", "default"], default=None)
+    t.add_argument("--spec", action="append",
+                   help="EngineSpec as JSON (repeatable)")
+    t.add_argument("--out", default=None,
+                   help="table path to write (default: print)")
+    t.add_argument("--merge", action="store_true",
+                   help="merge into the existing table at --out")
+    t.add_argument("--steps", type=int, default=8)
+    t.add_argument("--rounds", type=int, default=3)
+    t.add_argument("--seed", type=int, default=0)
+    t.add_argument("--max-candidates", type=int, default=None)
+    t.set_defaults(fn=_cmd_tune)
+
+    s = sub.add_parser("show", help="print a table")
+    s.add_argument("path", nargs="?", default=DEFAULT_TABLE_PATH)
+    s.set_defaults(fn=_cmd_show)
+
+    d = sub.add_parser("diff",
+                       help="diff two tables (exit 1 on differences)")
+    d.add_argument("old")
+    d.add_argument("new")
+    d.set_defaults(fn=_cmd_diff)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,99 @@
+"""Measurement discipline for the autotuner.
+
+Two tools, both reused by the benchmark suite (``benchmarks/common.py``
+re-exports them):
+
+* :func:`time_interleaved` — interleaved min-of-rounds timing. All
+  candidates are warmed (compile excluded), then timed round-robin for
+  ``rounds`` passes; a candidate's score is its *minimum* over rounds.
+  Interleaving spreads slow drift (thermal, other tenants) evenly over
+  the field instead of biasing whichever candidate ran last, and min-of
+  rejects one-sided noise (a measurement can only be too slow, never
+  too fast).
+
+* :func:`roofline_step_seconds` — a memory-bandwidth lower bound on one
+  fused stencil launch, from the measured copy bandwidth of this host.
+  A candidate that beats this bound did not do the work (caching
+  artifact, dead-code elimination, wrong shapes) — the search logs a
+  warning and distrusts the number rather than shipping it.
+"""
+from __future__ import annotations
+
+import logging
+import math
+import time
+from typing import Callable, Dict, Iterable, Mapping, Optional
+
+log = logging.getLogger("repro.tuning")
+
+_bandwidth_cache: Dict[int, float] = {}
+
+
+def geomean(xs: Iterable[float]) -> float:
+    vals = [float(x) for x in xs]
+    if not vals:
+        return 1.0
+    return math.exp(sum(math.log(v) for v in vals) / len(vals))
+
+
+def time_interleaved(fns: Mapping[str, Callable[[], object]],
+                     rounds: int = 5,
+                     warmup: int = 2) -> Dict[str, float]:
+    """Best-of-``rounds`` wall time per zero-arg callable, interleaved.
+
+    Each callable is invoked ``warmup`` times first (unmeasured —
+    absorbs compilation), then the field is timed round-robin; the
+    returned score is each candidate's minimum single-call seconds.
+    Device work is synchronized with ``jax.block_until_ready`` so async
+    dispatch does not undercount.
+    """
+    import jax
+    for fn in fns.values():
+        for _ in range(max(1, warmup)):
+            jax.block_until_ready(fn())
+    best = {name: float("inf") for name in fns}
+    for _ in range(max(1, rounds)):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return best
+
+
+def measured_bandwidth_gbs(nbytes: int = 1 << 24,
+                           rounds: int = 5) -> float:
+    """Achievable device copy bandwidth (GB/s, read+write counted),
+    measured once per process with a float32 roundtrip copy."""
+    if nbytes in _bandwidth_cache:
+        return _bandwidth_cache[nbytes]
+    import jax
+    import jax.numpy as jnp
+    n = nbytes // 4
+    x = jnp.arange(n, dtype=jnp.float32)
+    copy = jax.jit(lambda a: a + 1.0)
+    jax.block_until_ready(copy(x))
+    best = float("inf")
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        jax.block_until_ready(copy(x))
+        best = min(best, time.perf_counter() - t0)
+    gbs = (2 * nbytes) / best / 1e9
+    _bandwidth_cache[nbytes] = gbs
+    return gbs
+
+
+def roofline_step_seconds(n_blocks: int, rho: int, k: int,
+                          itemsize: int = 4,
+                          bandwidth_gbs: Optional[float] = None) -> float:
+    """Memory-bandwidth lower bound on one *advanced step* of a depth-k
+    fused launch over a compact layout of ``n_blocks`` blocks of side
+    ``rho``: the launch must at minimum read the (rho+2k)-wide haloed
+    state and write the rho-wide core, amortized over the k steps it
+    advances. Loose by design — it only has to catch measurements that
+    are impossibly fast, not predict real kernels.
+    """
+    if bandwidth_gbs is None:
+        bandwidth_gbs = measured_bandwidth_gbs()
+    w = rho + 2 * k
+    bytes_moved = n_blocks * (w * w + rho * rho) * itemsize
+    return bytes_moved / (bandwidth_gbs * 1e9) / k

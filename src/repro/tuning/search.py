@@ -1,0 +1,237 @@
+"""Autotuner search: sweep the discrete knob space per EngineSpec.
+
+For one configuration identity (kind, fractal, r, m, workload, mesh)
+the tunable space is
+
+* temporal-fusion depth ``k`` in 1..rho,
+* MXU macro-tile packing ``P`` (MXU kinds only): the lane heuristic's
+  choice plus halvings/doublings of it, clamped to [1, n_blocks],
+* halo-exchange mode in {p2p, gather} (dist kinds only).
+
+Every candidate is parity-gated against the static-heuristic engine on
+the same initial state before it may win (bit-exact for integer CA
+workloads, allclose for float PDEs) — a fast wrong kernel is not a
+winner. Timing is interleaved min-of-rounds (see tuning/measure.py),
+and winners are cross-checked against the memory-bandwidth roofline:
+a time below the bound indicates a measurement artifact, so the search
+logs a warning and flags the result rather than trusting it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Dict, List, Optional, Tuple
+
+from repro.tuning.measure import (roofline_step_seconds, time_interleaved)
+from repro.tuning.spec import EngineSpec
+from repro.tuning.table import TableEntry, TuningTable
+
+log = logging.getLogger("repro.tuning")
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One concrete knob assignment in the sweep."""
+
+    fusion_k: int
+    macro_p: Optional[int] = None
+    exchange: str = "auto"
+
+    @property
+    def label(self) -> str:
+        parts = [f"k{self.fusion_k}"]
+        if self.macro_p is not None:
+            parts.append(f"P{self.macro_p}")
+        if self.exchange != "auto":
+            parts.append(self.exchange)
+        return "-".join(parts)
+
+
+@dataclasses.dataclass
+class TuneResult:
+    """Outcome of tuning one spec: the winner, the heuristic baseline,
+    the full timing matrix, and the quality gates that vouch for it."""
+
+    spec: EngineSpec               # canonical identity (knobs cleared)
+    best: Candidate
+    baseline: Candidate
+    times: Dict[str, float]        # candidate label -> best seconds/step
+    speedup: float                 # heuristic time / best time (>= 1.0)
+    parity_failures: List[str]     # labels rejected by the parity gate
+    roofline_s: float              # lower bound, seconds per step
+    suspect: bool                  # best beat the roofline bound
+
+    def entry(self) -> TableEntry:
+        return TableEntry(
+            fusion_k=self.best.fusion_k,
+            macro_p=self.best.macro_p,
+            exchange=self.best.exchange,
+            meta={"speedup": round(self.speedup, 4),
+                  "baseline": self.baseline.label,
+                  "best_s": self.times[self.best.label],
+                  "suspect": self.suspect},
+        )
+
+
+def _heuristic_candidate(spec: EngineSpec) -> Candidate:
+    """The knob assignment the static heuristics would pick (the
+    pre-tuner default and the baseline every winner is scored
+    against)."""
+    resolved = spec.normalize(table=None)
+    return Candidate(fusion_k=resolved.fusion_k, macro_p=None,
+                     exchange="p2p" if spec.is_dist else "auto")
+
+
+def candidate_space(spec: EngineSpec, n_blocks: int,
+                    max_candidates: Optional[int] = None
+                    ) -> List[Candidate]:
+    """The bounded discrete sweep for ``spec`` (see module docstring).
+    Always contains the heuristic baseline so the winner can never be
+    slower than it on the same measurement matrix."""
+    spec = spec.canonical()
+    if not spec.is_block:
+        raise ValueError(
+            f"kind {spec.kind!r} has no tunable knobs (non-block kind)")
+    rho = spec.rho
+    ks = list(range(1, rho + 1))
+    exchanges = ["p2p", "gather"] if spec.is_dist else ["auto"]
+    cands: List[Candidate] = []
+    for k in ks:
+        ps: List[Optional[int]] = [None]
+        if spec.kind in ("pallas-mxu", "dist-mxu", "pallas-3d-mxu"):
+            w = rho + 2 * k
+            default_p = max(1, min(128 // max(1, w), n_blocks))
+            for p in {1, default_p // 2, default_p,
+                      min(2 * default_p, n_blocks)}:
+                if p >= 1 and p not in ps:
+                    ps.append(int(p))
+        for p in ps:
+            for ex in exchanges:
+                cands.append(Candidate(k, p, ex))
+    base = _heuristic_candidate(spec)
+    if base not in cands:
+        cands.insert(0, base)
+    if max_candidates is not None and len(cands) > max_candidates:
+        keep = [c for c in cands if c == base]
+        keep += [c for c in cands if c != base]
+        cands = keep[:max_candidates]
+    return cands
+
+
+def _states_equal(workload, a, b) -> bool:
+    import jax.numpy as jnp
+    import numpy as np
+    a, b = np.asarray(a), np.asarray(b)
+    if workload.dtype == jnp.uint8:
+        return bool(np.array_equal(a, b))
+    return bool(np.allclose(a, b, rtol=1e-4, atol=1e-4))
+
+
+def tune_spec(spec: EngineSpec, *, steps: int = 8, rounds: int = 3,
+              seed: int = 0, max_candidates: Optional[int] = None,
+              parity_steps: Optional[int] = None) -> TuneResult:
+    """Sweep, parity-gate, time, and pick the winner for one spec.
+
+    ``steps`` is the fused-run length each timed call advances (scores
+    are seconds per advanced step); ``parity_steps`` defaults to
+    ``steps``. Engines are built with the tuning table *disabled* — the
+    sweep measures knobs, it must not read its own output.
+    """
+    from repro.core.stencil import make_engine
+    base = dataclasses.replace(spec.canonical(), fusion_k=None,
+                               macro_p=None, exchange="auto")
+    baseline = _heuristic_candidate(base)
+    cands = candidate_space(base, _n_blocks_for(base),
+                            max_candidates=max_candidates)
+    mesh = base.build_mesh()
+    frac = base.build_frac()
+    workload = base.build_workload()
+
+    engines = {}
+    for cand in cands:
+        cand_spec = dataclasses.replace(
+            base, fusion_k=cand.fusion_k, macro_p=cand.macro_p,
+            exchange=cand.exchange)
+        engines[cand.label] = make_engine(
+            cand_spec, frac=frac, workload=workload, mesh=mesh,
+            table=None)
+
+    ref_engine = engines[baseline.label]
+    state0 = ref_engine.init_random(seed)
+    n_parity = parity_steps if parity_steps is not None else steps
+
+    ref_out = ref_engine.to_expanded(ref_engine.run(state0, n_parity))
+    parity_failures: List[str] = []
+    for cand in cands:
+        if cand.label == baseline.label:
+            continue
+        eng = engines[cand.label]
+        out = eng.to_expanded(eng.run(eng.init_random(seed), n_parity))
+        if not _states_equal(workload, ref_out, out):
+            parity_failures.append(cand.label)
+            log.error("tuning parity FAILED for %s candidate %s — "
+                      "excluded from the sweep", spec.tuning_key(),
+                      cand.label)
+    ok = [c for c in cands if c.label not in parity_failures]
+
+    fns = {c.label: (lambda e=engines[c.label], s0=state0:
+                     e.run(s0, steps)) for c in ok}
+    raw = time_interleaved(fns, rounds=rounds)
+    times = {label: t / steps for label, t in raw.items()}
+
+    layout = ref_engine.layout if hasattr(ref_engine, "layout") else None
+    itemsize = 1 if _is_uint8(workload) else 4
+    roofline = roofline_step_seconds(
+        _n_blocks_for(base), base.rho, baseline.fusion_k,
+        itemsize=itemsize) if layout is not None else 0.0
+
+    best = min(ok, key=lambda c: times[c.label])
+    suspect = bool(roofline and times[best.label] < roofline)
+    if suspect:
+        log.warning(
+            "tuning winner %s for %s measured %.3g s/step, below the "
+            "roofline bound %.3g s/step — measurement artifact likely; "
+            "treat with suspicion", best.label, spec.tuning_key(),
+            times[best.label], roofline)
+    speedup = times[baseline.label] / times[best.label]
+    return TuneResult(spec=base, best=best, baseline=baseline,
+                      times=times, speedup=speedup,
+                      parity_failures=parity_failures,
+                      roofline_s=roofline, suspect=suspect)
+
+
+def tune_many(specs, *, steps: int = 8, rounds: int = 3, seed: int = 0,
+              max_candidates: Optional[int] = None,
+              table: Optional[TuningTable] = None
+              ) -> Tuple[TuningTable, List[TuneResult]]:
+    """Tune each spec and collect winners into ``table`` (a fresh one
+    by default). Winners that failed the roofline sanity check are
+    still recorded (flagged ``suspect`` in entry meta) but logged."""
+    table = table if table is not None else TuningTable()
+    results = []
+    for spec in specs:
+        res = tune_spec(spec, steps=steps, rounds=rounds, seed=seed,
+                        max_candidates=max_candidates)
+        table.put(res.spec, res.entry())
+        results.append(res)
+        log.info("tuned %s: best=%s (%.2fx vs heuristic %s)",
+                 res.spec.tuning_key(), res.best.label, res.speedup,
+                 res.baseline.label)
+    return table, results
+
+
+def _is_uint8(workload) -> bool:
+    import jax.numpy as jnp
+    return workload.dtype == jnp.uint8
+
+
+def _n_blocks_for(spec: EngineSpec) -> int:
+    """Block count of the spec's layout (cheap: counts occupied blocks
+    without building mask tables)."""
+    frac = spec.build_frac()
+    if spec.kind in ("bb3d", "cell3d", "block3d", "pallas-3d",
+                     "pallas-3d-mxu"):
+        from repro.core.compact3d import BlockLayout3D
+        return BlockLayout3D(frac, spec.r, spec.m).n_blocks
+    from repro.core.compact import BlockLayout
+    return BlockLayout(frac, spec.r, spec.m).n_blocks

@@ -1,0 +1,219 @@
+"""Versioned tuning tables: persisted autotuner winners.
+
+A :class:`TuningTable` maps normalized :class:`~repro.tuning.spec.
+EngineSpec` identities (``spec.tuning_key()`` — canonical identity
+minus the tunable knobs, mesh bucketed by shape) to a
+:class:`TableEntry` holding the measured-best knob values. Tables are
+plain versioned JSON so they can ship in the repo, diff cleanly, and
+survive refactors: ``src/repro/tuning/tables/default.json`` is the
+table shipped with the package and consulted by ``EngineSpec.
+normalize()`` whenever a tunable knob is left unset.
+
+Environment knobs:
+
+* ``SQUEEZE_TUNING=off|0|false|no`` disables table consults entirely —
+  every lookup records an ``engine.tune.fallback`` and the static
+  heuristics apply (the pre-tuner behavior, used by tests that pin
+  heuristic-resolved defaults);
+* ``SQUEEZE_TUNING_TABLE=/path/to/table.json`` swaps the shipped table
+  for a custom one (unreadable/invalid paths degrade to fallback with
+  a one-time warning, never an exception).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import logging
+import os
+import threading
+from typing import Any, Dict, Iterator, Optional, Tuple
+
+from repro.tuning.spec import EngineSpec
+
+log = logging.getLogger("repro.tuning")
+
+#: bump when the on-disk schema changes; loaders reject other versions
+TABLE_VERSION = 1
+
+#: shipped default table (packaged with the repo)
+DEFAULT_TABLE_PATH = os.path.join(
+    os.path.dirname(__file__), "tables", "default.json")
+
+_OFF_VALUES = frozenset({"0", "off", "false", "no"})
+
+
+def tuning_enabled() -> bool:
+    """False when ``SQUEEZE_TUNING`` opts out of table consults."""
+    return os.environ.get(
+        "SQUEEZE_TUNING", "on").strip().lower() not in _OFF_VALUES
+
+
+@dataclasses.dataclass(frozen=True)
+class TableEntry:
+    """Measured-best knob values for one configuration. ``None`` /
+    ``'auto'`` fields mean "no opinion" — the next precedence tier
+    (static heuristic) resolves them. ``meta`` carries measurement
+    provenance (speedup vs heuristic, timing, host) and is ignored by
+    lookups."""
+
+    fusion_k: Optional[int] = None
+    macro_p: Optional[int] = None
+    exchange: str = "auto"
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> Dict[str, Any]:
+        d = {"fusion_k": self.fusion_k, "macro_p": self.macro_p,
+             "exchange": self.exchange}
+        if self.meta:
+            d["meta"] = self.meta
+        return d
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "TableEntry":
+        return cls(fusion_k=d.get("fusion_k"),
+                   macro_p=d.get("macro_p"),
+                   exchange=d.get("exchange", "auto"),
+                   meta=dict(d.get("meta", {})))
+
+
+class TuningTable:
+    """In-memory tuning table with JSON load/save and diff."""
+
+    def __init__(self, entries: Optional[Dict[str, TableEntry]] = None,
+                 meta: Optional[Dict[str, Any]] = None) -> None:
+        self.entries: Dict[str, TableEntry] = dict(entries or {})
+        self.meta: Dict[str, Any] = dict(meta or {})
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def __iter__(self) -> Iterator[Tuple[str, TableEntry]]:
+        return iter(sorted(self.entries.items()))
+
+    # ----------------------------------------------------------- lookup
+    def get(self, spec: EngineSpec) -> Optional[TableEntry]:
+        return self.entries.get(spec.tuning_key())
+
+    def put(self, spec: EngineSpec, entry: TableEntry) -> None:
+        self.entries[spec.tuning_key()] = entry
+
+    # ------------------------------------------------------ persistence
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "version": TABLE_VERSION,
+            "meta": self.meta,
+            "entries": {k: e.to_json() for k, e in sorted(
+                self.entries.items())},
+        }
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "TuningTable":
+        version = d.get("version")
+        if version != TABLE_VERSION:
+            raise ValueError(
+                f"tuning table version {version!r} unsupported "
+                f"(want {TABLE_VERSION})")
+        return cls(entries={k: TableEntry.from_json(e)
+                            for k, e in d.get("entries", {}).items()},
+                   meta=dict(d.get("meta", {})))
+
+    def save(self, path: str) -> None:
+        tmp = f"{path}.tmp"
+        with open(tmp, "w", encoding="utf-8") as fh:
+            json.dump(self.to_json(), fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path: str) -> "TuningTable":
+        with open(path, "r", encoding="utf-8") as fh:
+            return cls.from_json(json.load(fh))
+
+    # ------------------------------------------------------------- diff
+    def diff(self, other: "TuningTable") -> Dict[str, Any]:
+        """Key-level diff vs ``other`` (self = new, other = old):
+        added / removed / changed (with old+new knob values)."""
+        mine, theirs = self.entries, other.entries
+        added = sorted(set(mine) - set(theirs))
+        removed = sorted(set(theirs) - set(mine))
+        changed = {}
+        for key in sorted(set(mine) & set(theirs)):
+            a, b = theirs[key], mine[key]
+            if (a.fusion_k, a.macro_p, a.exchange) != (
+                    b.fusion_k, b.macro_p, b.exchange):
+                changed[key] = {"old": a.to_json(), "new": b.to_json()}
+        for d in changed.values():
+            d["old"].pop("meta", None)
+            d["new"].pop("meta", None)
+        return {"added": added, "removed": removed, "changed": changed}
+
+
+# --------------------------------------------------- default-table cache
+_cache_lock = threading.Lock()
+_cache: Dict[str, Optional[TuningTable]] = {}
+_warned: set = set()
+
+
+def _active_table_path() -> str:
+    return os.environ.get("SQUEEZE_TUNING_TABLE", DEFAULT_TABLE_PATH)
+
+
+def default_table() -> Optional[TuningTable]:
+    """The active table (shipped default unless ``SQUEEZE_TUNING_TABLE``
+    overrides it), cached per path. ``None`` when the file is missing
+    or invalid — consults then degrade to heuristic fallback."""
+    path = _active_table_path()
+    with _cache_lock:
+        if path in _cache:
+            return _cache[path]
+    try:
+        table: Optional[TuningTable] = TuningTable.load(path)
+    except FileNotFoundError:
+        table = None
+        if path != DEFAULT_TABLE_PATH and path not in _warned:
+            _warned.add(path)
+            log.warning("tuning table %s not found; falling back to "
+                        "static heuristics", path)
+    except (ValueError, OSError, json.JSONDecodeError) as exc:
+        table = None
+        if path not in _warned:
+            _warned.add(path)
+            log.warning("failed to load tuning table %s (%s); falling "
+                        "back to static heuristics", path, exc)
+    with _cache_lock:
+        _cache[path] = table
+    return table
+
+
+def reset_default_table_cache() -> None:
+    """Drop the cached table (tests / after ``save`` to the active
+    path)."""
+    with _cache_lock:
+        _cache.clear()
+        _warned.clear()
+
+
+def consult(spec: EngineSpec,
+            table: Optional[TuningTable] = None) -> Optional[TableEntry]:
+    """One table lookup for ``EngineSpec.normalize()``, with telemetry.
+
+    ``table=None`` means "the active default table". Records exactly one
+    ``engine.tune.{hit,miss,fallback}`` counter: *hit* = entry found,
+    *miss* = table consulted but has no entry for this key, *fallback* =
+    no table was consulted (tuning disabled or table unavailable).
+    """
+    from repro import obs
+    if table is None:
+        if not tuning_enabled():
+            obs.inc("engine.tune.fallback", kind=spec.kind)
+            return None
+        table = default_table()
+        if table is None:
+            obs.inc("engine.tune.fallback", kind=spec.kind)
+            return None
+    entry = table.get(spec)
+    if entry is None:
+        obs.inc("engine.tune.miss", kind=spec.kind)
+    else:
+        obs.inc("engine.tune.hit", kind=spec.kind)
+    return entry

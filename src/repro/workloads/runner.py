@@ -1,8 +1,10 @@
 """Batched multi-fractal simulation runtime.
 
 Serving many concurrent fractal simulations means many independent initial
-states over a small set of static configurations ``(engine kind, fractal,
-r, m, workload, k)``. This module provides the building block:
+states over a small set of static configurations. The configuration
+identity is :class:`repro.tuning.spec.EngineSpec` — the same object that
+keys the serving buckets and the autotuner's tables — and this module
+provides the building block:
 
   * one compiled step per static configuration, vmapped over a leading
     batch axis of independent states (B simulations advance in one XLA
@@ -12,32 +14,43 @@ r, m, workload, k)``. This module provides the building block:
     — the vmap path stays as the fallback for every other kind;
   * fused multi-step serving: ``run`` tiles the step count into
     floor(steps/k) vmapped k-step launches (temporal fusion over the
-    engines' depth-k halos) plus a single-step remainder; ``k`` is part of
-    the cache key (None resolves to the static heuristic, so the default
-    and an equal explicit depth share one entry);
+    engines' depth-k halos) plus a single-step remainder; the fusion
+    depth is part of the cache key (None resolves through the tuning
+    table, then the static heuristic — ``EngineSpec.normalize()`` — so
+    the default and an equal explicit depth share one entry);
   * zero-copy steady-state stepping: ``run(..., donate=True)`` routes
     through a ``donate_argnums`` jit so XLA reuses the incoming batch
     buffer for the output (the caller must not touch the input after);
-  * an LRU cache of those compiled engines keyed by the static tuple, so
-    a serving process pays tracing/compilation once per configuration, not
-    once per request;
+  * an LRU cache of those compiled engines keyed by the NORMALIZED spec,
+    so a serving process pays tracing/compilation once per
+    configuration, not once per request;
   * multi-device placement: with a ``mesh``, regular kinds shard the
     BATCH axis (whole simulations spread across devices — many small
     fractals) while the 'dist-*' kinds shard the BLOCK axis (one fractal
     too large per device, k-fused strip halo exchange — see
-    core/distributed.py and DESIGN.md Section 4); the mesh and fusion
-    depth are part of the cache key;
+    core/distributed.py and DESIGN.md Section 4); the mesh shape and
+    fusion depth are part of the cache key;
   * trace/build counters (``RunnerStats``) so reuse is *testable* — the
     suite asserts >= 8 concurrent simulations share one compiled engine.
+
+Every public method accepts either an ``EngineSpec`` first —
+``run(spec, states, steps)`` — or the legacy argument list
+``run(kind, frac, r, states, steps, ...)``; both flow through the one
+normalization path (``EngineSpec.normalize()``), so a spec call and the
+equivalent legacy call share one compiled entry. Custom (non-registry)
+fractals are identified by their position mask; custom workloads are
+identified by ``workload.name`` and must be passed as objects through
+the legacy form (give them unique names — the cache cannot distinguish
+two different workloads sharing one name).
 
 The runner is dimension-agnostic: the 3D kinds ('bb3d' | 'cell3d' |
 'block3d' | 'pallas-3d' | 'pallas-3d-mxu') dispatch states with 3D
 spatial trailing axes — (B, nx, ny, nz) cell states, (B, n_blocks, rho,
 rho, rho) block states — through the same vmapped-step/fused-run/LRU
 machinery; 'block3d' and 'pallas-3d*' are block kinds, so the fusion
-depth ``k`` participates in their cache key exactly as in 2D.
+depth participates in their cache key exactly as in 2D.
 
-See DESIGN.md Section 3.
+See DESIGN.md Sections 3 and 11.
 """
 from __future__ import annotations
 
@@ -45,12 +58,13 @@ import dataclasses
 import threading
 import time
 from collections import OrderedDict
-from typing import TYPE_CHECKING, Dict, Hashable, Optional, Tuple
+from typing import TYPE_CHECKING, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro import obs
+from repro.tuning.spec import EngineSpec, is_dist_kind
 from repro.workloads.base import StencilWorkload
 from repro.workloads.rules import LIFE
 
@@ -59,22 +73,14 @@ if TYPE_CHECKING:  # annotation-only; keeps runtime free of core imports
 
 Array = jnp.ndarray
 
-#: static configuration of one simulation family:
-#: (kind, fractal, r, m, workload, k, mesh, axis). The fractal stays
-#: ``Hashable`` here so this module needs nothing from ``repro.core`` at
-#: import time; ``mesh`` is None for single-device kinds (jax Meshes are
-#: hashable, so a multi-device placement is part of the cache identity).
-Key = Tuple[str, Hashable, int, int, StencilWorkload, int,
-            Optional[Hashable], str, str]
-
-#: engine kinds with block tiles (these support temporal fusion; for the
-#: rest k normalizes to 1 so equal configurations share a cache slot)
-_BLOCK_KINDS_PREFIX = ("block", "pallas", "dist")
+#: the cache identity of one simulation family: a *normalized*
+#: EngineSpec — the same object serving buckets and tuning tables key on
+Key = EngineSpec
 
 
 def _is_dist(kind: str) -> bool:
     """Multi-device engine kinds (block-axis sharding over a mesh)."""
-    return kind.startswith("dist-")
+    return is_dist_kind(kind)
 
 
 @dataclasses.dataclass
@@ -100,8 +106,21 @@ class _Entry:
     batched_run_donated: callable
 
 
+@dataclasses.dataclass(frozen=True)
+class _Resolved:
+    """One normalized configuration plus the objects ``_build`` needs
+    (the spec alone cannot carry custom fractal/workload objects or a
+    live mesh)."""
+
+    spec: EngineSpec          # normalized: THE cache key
+    frac: object
+    workload: StencilWorkload
+    mesh: object              # live Mesh or None
+
+
 class BatchedRunner:
-    """LRU cache of compiled batched engines over (kind, frac, r, m, wl, k).
+    """LRU cache of compiled batched engines keyed by normalized
+    EngineSpec.
 
     Thread-safe: the serving layer (``repro.serving``) drives one runner
     from many worker threads, including abandoned hang threads that may
@@ -122,46 +141,43 @@ class BatchedRunner:
         self._building: Dict[Key, threading.Event] = {}
 
     # ------------------------------------------------------------- cache
-    def _resolve_k(self, kind: str, frac: NBBFractal, m: int,
-                   k: Optional[int]) -> int:
-        """Concrete fusion depth for the cache key: non-block kinds have
-        nothing to fuse (-> 1); None resolves to the static heuristic so
-        the default and an equal explicit k share one compiled entry."""
-        if k is not None and k < 1:
-            raise ValueError(f"fusion depth k must be >= 1, got {k}")
-        if not kind.startswith(_BLOCK_KINDS_PREFIX):
-            return 1
-        if k is None:
-            from repro.core.stencil import default_fusion_k
-            return default_fusion_k(frac.s ** m)
-        return k
+    def _resolve(self, kind, frac=None, r: Optional[int] = None,
+                 m: int = 0, workload: Optional[StencilWorkload] = None,
+                 k: Optional[int] = None, mesh=None, axis: str = "data",
+                 exchange: str = "auto") -> _Resolved:
+        """THE normalization path: spec or legacy args in, normalized
+        spec + build objects out. ``EngineSpec.normalize()`` does the
+        alias rewrite, the non-block/non-dist knob zeroing, and the
+        explicit > table > heuristic knob resolution; an explicit
+        ``k < 1`` raises here, before any cache traffic."""
+        if isinstance(kind, EngineSpec):
+            # frac/workload/mesh act as OBJECT overrides here (custom
+            # workloads are registry-invisible; the serving layer passes
+            # the request's own objects) — identity still comes from the
+            # spec alone
+            norm = kind.normalize()
+            return _Resolved(
+                spec=norm,
+                frac=frac if frac is not None else norm.build_frac(),
+                workload=(workload if workload is not None
+                          else norm.build_workload()),
+                mesh=mesh if mesh is not None else norm.build_mesh())
+        workload = LIFE if workload is None else workload
+        spec = EngineSpec.from_args(kind, frac, r, m, workload,
+                                    fusion_k=k, mesh=mesh, axis=axis,
+                                    exchange=exchange)
+        norm = spec.normalize()
+        return _Resolved(spec=norm, frac=frac, workload=workload,
+                         mesh=mesh)
 
-    def _resolve_key(self, kind: str, frac: NBBFractal, r: int, m: int,
-                     workload: StencilWorkload, k: Optional[int] = None,
-                     mesh=None, axis: str = "data",
-                     exchange: str = "auto") -> Key:
-        """The normalized cache identity of one configuration."""
-        if kind == "pallas":  # make_engine's alias; one cache slot, not two
-            kind = "pallas-strips"
-        k = self._resolve_k(kind, frac, m, k)
-        if not _is_dist(kind):
-            mesh = None  # placement-only for non-dist kinds; one slot
-            exchange = "auto"  # halo exchange is a dist-only knob
-        return (kind, frac, r, m, workload, k, mesh, axis, exchange)
-
-    def _get(self, kind: str, frac: NBBFractal, r: int, m: int,
-             workload: StencilWorkload, k: Optional[int] = None,
-             mesh=None, axis: str = "data",
-             exchange: str = "auto") -> _Entry:
-        key = self._resolve_key(kind, frac, r, m, workload, k, mesh, axis,
-                                exchange)
-        kind, _, _, _, _, k, mesh, axis, exchange = key
+    def _get(self, res: _Resolved) -> _Entry:
+        key = res.spec
         while True:
             with self._lock:
                 entry = self._cache.get(key)
                 if entry is not None:
                     self._cache.move_to_end(key)
-                    obs.inc("runner.cache.hit", kind=kind)
+                    obs.inc("runner.cache.hit", kind=key.kind)
                     return entry
                 ev = self._building.get(key)
                 if ev is None:
@@ -172,25 +188,25 @@ class BatchedRunner:
                     break
             ev.wait()
         try:
-            entry = self._build(key)
+            entry = self._build(res)
             return self._insert(key, entry)
         finally:
             with self._lock:
                 self._building.pop(key).set()
 
-    def _build(self, key: Key) -> _Entry:
-        """Construct + wrap the engine for ``key`` (no lock held: engine
+    def _build(self, res: _Resolved) -> _Entry:
+        """Construct + wrap the engine for ``res`` (no lock held: engine
         construction and jax tracing can take seconds)."""
-        kind, frac, r, m, workload, k, mesh, axis, exchange = key
+        spec = res.spec
+        kind, k, workload = spec.kind, spec.fusion_k, res.workload
         obs.inc("runner.cache.miss", kind=kind)
-        obs.inc("runner.build", kind=kind, workload=workload.name, k=k)
+        obs.inc("runner.build", kind=kind, workload=spec.workload, k=k)
         from repro.core.stencil import make_engine
-        is_block = kind.startswith(_BLOCK_KINDS_PREFIX)
-        # the resolved k always becomes the engine's fusion depth on block
-        # kinds — an explicit k=1 must mean "no fusion", not "heuristic"
-        engine = make_engine(kind, frac, r, m, workload=workload,
-                             fusion_k=k if is_block else None,
-                             mesh=mesh, axis=axis, exchange=exchange)
+        # the spec is already normalized — build with the table DISABLED
+        # so make_engine does not re-consult it (one consult, and one
+        # engine.tune.* outcome, per runner call; none per build)
+        engine = make_engine(spec, frac=res.frac, workload=workload,
+                             mesh=res.mesh, table=None)
         if _is_dist(kind):
             # the distributed engine owns its jit cache, its fused-launch
             # tiling (exactly ceil(steps/k) collectives) and its exchange
@@ -203,7 +219,7 @@ class BatchedRunner:
                               states, int(steps)),
                           lambda states, steps: engine.run(
                               states, int(steps), donate=True))
-        fused = is_block and k > 1
+        fused = spec.is_block and k > 1
         stats = self.stats
         # the v5 'mxu' engine advances the whole batch through ONE kernel
         # dispatch over a (B, n_macro_tiles) grid — the scalar-prefetched
@@ -217,7 +233,7 @@ class BatchedRunner:
             onto the registry so retrace regressions are assertable per
             (kind, workload, k) without a runner handle."""
             stats.traces += 1
-            obs.inc("runner.trace", kind=kind, workload=workload.name,
+            obs.inc("runner.trace", kind=kind, workload=spec.workload,
                     k=k)
 
         def traced_step(state):
@@ -269,46 +285,48 @@ class BatchedRunner:
                 obs.inc("runner.cache.evict")
         return entry
 
-    def is_cached(self, kind: str, frac: NBBFractal, r: int, m: int = 0,
-                  workload: StencilWorkload = LIFE,
+    def is_cached(self, kind, frac=None, r: Optional[int] = None,
+                  m: int = 0, workload: Optional[StencilWorkload] = None,
                   k: Optional[int] = None, mesh=None,
                   axis: str = "data", exchange: str = "auto") -> bool:
         """Whether this configuration is a warm cache hit right now
         (no build, no LRU touch) — the serving layer's admission
-        control uses this to bound concurrent cold compiles."""
-        key = self._resolve_key(kind, frac, r, m, workload, k, mesh, axis,
-                                exchange)
+        control uses this to bound concurrent cold compiles. Accepts a
+        spec (``is_cached(spec)``) or legacy args."""
+        res = self._resolve(kind, frac, r, m, workload, k, mesh, axis,
+                            exchange)
         with self._lock:
-            return key in self._cache
+            return res.spec in self._cache
 
-    def invalidate(self, kind: str, frac: NBBFractal, r: int, m: int = 0,
-                   workload: StencilWorkload = LIFE,
+    def invalidate(self, kind, frac=None, r: Optional[int] = None,
+                   m: int = 0, workload: Optional[StencilWorkload] = None,
                    k: Optional[int] = None, mesh=None,
                    axis: str = "data", exchange: str = "auto") -> bool:
         """Drop one compiled entry (if cached): the serving layer's
         engine-restart path after a watchdog-detected hang — the next
         ``run`` rebuilds from scratch. Returns True if an entry was
-        evicted."""
-        key = self._resolve_key(kind, frac, r, m, workload, k, mesh, axis,
-                                exchange)
+        evicted. Accepts a spec or legacy args."""
+        res = self._resolve(kind, frac, r, m, workload, k, mesh, axis,
+                            exchange)
         with self._lock:
-            entry = self._cache.pop(key, None)
+            entry = self._cache.pop(res.spec, None)
             if entry is not None:
-                obs.inc("runner.cache.invalidate", kind=key[0])
+                obs.inc("runner.cache.invalidate", kind=res.spec.kind)
             return entry is not None
 
-    def engine_for(self, kind: str, frac: NBBFractal, r: int, m: int = 0,
-                   workload: StencilWorkload = LIFE,
+    def engine_for(self, kind, frac=None, r: Optional[int] = None,
+                   m: int = 0, workload: Optional[StencilWorkload] = None,
                    k: Optional[int] = None, mesh=None, axis: str = "data",
                    exchange: str = "auto"):
         """The (cached) underlying single-simulation engine. ``exchange``
         picks the dist-* halo-exchange mode ('auto' | 'p2p' | 'gather';
         ignored — and normalized out of the cache key — for
         single-device kinds). ``step``/``run`` use the 'auto' default,
-        which resolves to the neighbor-only p2p exchange whenever the
-        mesh supports it."""
-        return self._get(kind, frac, r, m, workload, k, mesh, axis,
-                         exchange).engine
+        which resolves through the tuning table, then to the
+        neighbor-only p2p exchange whenever the mesh supports it.
+        Accepts a spec (``engine_for(spec)``) or legacy args."""
+        return self._get(self._resolve(kind, frac, r, m, workload, k,
+                                       mesh, axis, exchange)).engine
 
     def cache_size(self) -> int:
         return len(self._cache)
@@ -327,73 +345,88 @@ class BatchedRunner:
         return jax.device_put(states, NamedSharding(mesh, spec))
 
     # ---------------------------------------------------------- batched API
-    def init_batch(self, kind: str, frac: NBBFractal, r: int,
-                   seeds, m: int = 0,
-                   workload: StencilWorkload = LIFE,
+    def init_batch(self, kind, frac=None, r: Optional[int] = None,
+                   seeds=None, m: int = 0,
+                   workload: Optional[StencilWorkload] = None,
                    mesh=None, axis: str = "data") -> Array:
         """Stack independent initial states: (B, *state_shape). With a
         ``mesh``, 'dist-*' kinds come back sharded over the BLOCK axis
         (one fractal spread across devices); every other kind is sharded
-        over the BATCH axis (whole simulations spread across devices)."""
-        engine = self.engine_for(kind, frac, r, m, workload, None, mesh,
-                                 axis)
-        if _is_dist(kind):
+        over the BATCH axis (whole simulations spread across devices).
+        Spec form: ``init_batch(spec, seeds, mesh=...)``."""
+        if isinstance(kind, EngineSpec) and seeds is None:
+            seeds, frac = frac, None  # init_batch(spec, seeds) form
+        res = self._resolve(kind, frac, r, m, workload, None, mesh, axis)
+        engine = self._get(res).engine
+        if _is_dist(res.spec.kind):
             return engine.init_batch(seeds)
         states = jnp.stack([engine.init_random(int(s)) for s in seeds])
-        if mesh is not None:
-            states = self.place_batch(states, mesh, axis)
+        if res.mesh is not None:
+            states = self.place_batch(states, res.mesh, axis)
         return states
 
-    def step(self, kind: str, frac: NBBFractal, r: int, states: Array,
-             m: int = 0, workload: StencilWorkload = LIFE,
+    def step(self, kind, frac=None, r: Optional[int] = None,
+             states: Optional[Array] = None, m: int = 0,
+             workload: Optional[StencilWorkload] = None,
              mesh=None, axis: str = "data") -> Array:
-        """One step of B independent simulations, one compiled call."""
-        return self._get(kind, frac, r, m, workload, None, mesh,
-                         axis).batched_step(states)
+        """One step of B independent simulations, one compiled call.
+        Spec form: ``step(spec, states)``."""
+        if isinstance(kind, EngineSpec) and states is None:
+            states, frac = frac, None  # step(spec, states) form
+        res = self._resolve(kind, frac, r, m, workload, None, mesh, axis)
+        return self._get(res).batched_step(states)
 
-    def run(self, kind: str, frac: NBBFractal, r: int, states: Array,
-            steps: int, m: int = 0,
-            workload: StencilWorkload = LIFE,
+    def run(self, kind, frac=None, r: Optional[int] = None,
+            states: Optional[Array] = None, steps: Optional[int] = None,
+            m: int = 0, workload: Optional[StencilWorkload] = None,
             k: Optional[int] = None, donate: bool = False,
             mesh=None, axis: str = "data") -> Array:
         """``steps`` steps of B independent simulations, tiled into
         floor(steps/k) fused k-step launches plus a steps%k single-step
-        remainder (``k=None``: the engine heuristic; non-block kinds step
-        singly). ``steps`` is a dynamic fori_loop bound: changing it does
-        not retrace (the 'dist-*' kinds instead tile in the engine so the
-        collective count is exactly ceil(steps/k); their remainder launch
-        compiles once per distinct steps%k, bounded by k).
-        ``donate=True`` hands the ``states`` buffer to XLA for in-place
-        reuse — zero-copy steady-state stepping; the caller must not use
-        ``states`` afterwards.
+        remainder (``k=None``: tuning table, then the engine heuristic;
+        non-block kinds step singly). ``steps`` is a dynamic fori_loop
+        bound: changing it does not retrace (the 'dist-*' kinds instead
+        tile in the engine so the collective count is exactly
+        ceil(steps/k); their remainder launch compiles once per distinct
+        steps%k, bounded by k). ``donate=True`` hands the ``states``
+        buffer to XLA for in-place reuse — zero-copy steady-state
+        stepping; the caller must not use ``states`` afterwards.
+        Spec form: ``run(spec, states, steps, donate=...)``.
 
         With telemetry enabled, each call records a ``runner.run.seconds``
         wall-time histogram sample (dispatch latency: time to hand the
         work to XLA, not device completion on async backends) plus batch
         size / step-count histograms, all labeled by ``kind``."""
+        if isinstance(kind, EngineSpec) and states is None:
+            states, steps, frac, r = frac, r, None, None
         t0 = time.perf_counter() if obs.enabled() else None
-        entry = self._get(kind, frac, r, m, workload, k, mesh, axis)
+        res = self._resolve(kind, frac, r, m, workload, k, mesh, axis)
+        entry = self._get(res)
+        label = res.spec.kind
         fn = entry.batched_run_donated if donate else entry.batched_run
-        with obs.span("runner.run", kind=kind, steps=int(steps)):
+        with obs.span("runner.run", kind=label, steps=int(steps)):
             out = fn(states, jnp.asarray(steps, jnp.int32))
         if t0 is not None:
             obs.observe("runner.run.seconds",
-                        time.perf_counter() - t0, kind=kind)
+                        time.perf_counter() - t0, kind=label)
             obs.observe("runner.batch_size", int(states.shape[0]),
-                        kind=kind)
-            obs.observe("runner.steps", int(steps), kind=kind)
-            obs.inc("runner.runs", kind=kind)
+                        kind=label)
+            obs.observe("runner.steps", int(steps), kind=label)
+            obs.inc("runner.runs", kind=label)
             if donate:
-                obs.inc("runner.donated_runs", kind=kind)
+                obs.inc("runner.donated_runs", kind=label)
         return out
 
-    def to_expanded(self, kind: str, frac: NBBFractal, r: int,
-                    states: Array, m: int = 0,
-                    workload: StencilWorkload = LIFE,
+    def to_expanded(self, kind, frac=None, r: Optional[int] = None,
+                    states: Optional[Array] = None, m: int = 0,
+                    workload: Optional[StencilWorkload] = None,
                     mesh=None, axis: str = "data") -> Array:
-        """Batched conversion to the (B, C?, n, n) expanded embedding."""
-        engine = self.engine_for(kind, frac, r, m, workload, None, mesh,
-                                 axis)
+        """Batched conversion to the (B, C?, n, n) expanded embedding.
+        Spec form: ``to_expanded(spec, states)``."""
+        if isinstance(kind, EngineSpec) and states is None:
+            states, frac = frac, None
+        res = self._resolve(kind, frac, r, m, workload, None, mesh, axis)
+        engine = self._get(res).engine
         if hasattr(engine, "to_expanded"):
             return jax.vmap(engine.to_expanded)(states)
         return states  # BB/lambda states are already expanded

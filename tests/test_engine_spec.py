@@ -1,0 +1,208 @@
+"""EngineSpec: the one configuration identity (DESIGN.md Section 11).
+
+Covers the tentpole contracts of the spec-first redesign:
+
+* exact JSON round-trip (tables persist specs; nothing may drift);
+* ``canonical()``/``normalize()`` reproduce the partition the runner's
+  old ``_resolve_key``/``_resolve_k`` pair induced, for every registry
+  kind — alias rewrite, non-block knob zeroing, dist-only knob zeroing,
+  heuristic fusion-depth resolution;
+* the runner, ``make_engine`` and ``SimRequest.bucket`` all key on the
+  SAME normalized object (one normalization code path);
+* the legacy argument lists keep working: ``make_engine(kind, frac,
+  r, ...)`` warns but builds, runner legacy calls share the compiled
+  slot with the equivalent spec call.
+"""
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import fractals
+from repro.core.stencil import default_fusion_k, make_engine
+from repro.serving.types import SimRequest
+from repro.tuning.spec import (KIND_ALIASES, KINDS, EngineSpec,
+                               is_block_kind, is_dist_kind)
+from repro.workloads.rules import LIFE
+from repro.workloads.runner import BatchedRunner
+
+
+@pytest.fixture(autouse=True)
+def _heuristics_only(monkeypatch):
+    """Identity tests must not depend on what the shipped table says."""
+    monkeypatch.setenv("SQUEEZE_TUNING", "off")
+
+
+def _spec_for(kind: str) -> EngineSpec:
+    """A small valid spec of the given kind."""
+    if kind.endswith("3d") or kind == "pallas-3d-mxu":
+        return EngineSpec(kind, 2, "sierpinski3d", 3,
+                          m=1 if is_block_kind(kind) else 0,
+                          workload="life3d")
+    return EngineSpec(kind, 2, "sierpinski", 4,
+                      m=1 if is_block_kind(kind) else 0,
+                      workload="life",
+                      mesh_shape=(1,) if is_dist_kind(kind) else None)
+
+
+# ------------------------------------------------------- JSON round-trip
+def test_json_round_trip_exact_every_kind():
+    for kind in KINDS:
+        spec = _spec_for(kind)
+        d = spec.to_json()
+        json.dumps(d)  # plain JSON, no custom encoder needed
+        assert EngineSpec.from_json(d) == spec
+        norm = spec.normalize()
+        assert EngineSpec.from_json(norm.to_json()) == norm
+
+
+def test_json_round_trip_mask_identity():
+    custom = fractals.NBBFractal("custom", 2, ((0, 0), (1, 1)))
+    spec = EngineSpec.from_args("block", custom, 4, 1, LIFE, fusion_k=2)
+    assert spec.frac == ((0, 0), (1, 1))  # not a registry fractal
+    d = json.loads(json.dumps(spec.to_json()))
+    assert EngineSpec.from_json(d) == spec
+    rebuilt = spec.build_frac()
+    assert rebuilt.s == 2 and tuple(rebuilt.positions) == custom.positions
+
+
+def test_from_args_registry_identity_by_name():
+    spec = EngineSpec.from_args("block", fractals.SIERPINSKI, 5, 2, LIFE)
+    assert spec.frac == "sierpinski" and spec.s == 2
+    assert spec.build_frac() is fractals.SIERPINSKI
+
+
+# ------------------------------------------------- canonical / normalize
+def test_canonical_alias_rewrite_symmetric():
+    a = EngineSpec("pallas", 2, "sierpinski", 4, 1).canonical()
+    b = EngineSpec("pallas-strips", 2, "sierpinski", 4, 1).canonical()
+    assert a == b and a.kind == "pallas-strips"
+    # make_engine agrees (the old asymmetry: only the runner rewrote it)
+    assert type(make_engine(a)) is type(make_engine(b))
+
+
+def test_canonical_validation():
+    with pytest.raises(ValueError, match="unknown engine kind"):
+        EngineSpec("nope", 2, "sierpinski", 4).canonical()
+    with pytest.raises(ValueError, match="k must be >= 1"):
+        EngineSpec("block", 2, "sierpinski", 4, 1,
+                   fusion_k=0).canonical()
+    with pytest.raises(ValueError, match="exchange"):
+        EngineSpec("dist-block", 2, "sierpinski", 4, 1,
+                   exchange="carrier-pigeon").canonical()
+
+
+def test_normalized_partition_matches_old_resolve_key():
+    """For every kind: the equalities/inequalities the runner's old
+    ``_resolve_key``/``_resolve_k`` tuple induced hold on normalized
+    specs (one normalization path, same partition)."""
+    for kind in KINDS:
+        spec = _spec_for(kind)
+        norm = spec.normalize()
+        assert norm == norm.normalize()  # idempotent (old key was too)
+        rho = norm.rho
+        if is_block_kind(kind):
+            # k=None resolves to the heuristic; an equal explicit k is
+            # the SAME configuration (old _resolve_k contract)
+            k_h = default_fusion_k(rho)
+            assert norm.fusion_k == k_h
+            expl = spec.__class__(**{**spec.to_json(),
+                                     "fusion_k": k_h})
+            assert EngineSpec.from_json(expl.to_json()).normalize() \
+                == norm
+            # ...and a different depth is a different configuration
+            other = EngineSpec.from_json(
+                {**spec.to_json(), "fusion_k": k_h + 1}).normalize()
+            assert other != norm
+        else:
+            # non-block kinds: k normalizes away entirely (one slot)
+            for k in (None, 1, 5):
+                same = EngineSpec.from_json(
+                    {**spec.to_json(), "fusion_k": k}).normalize()
+                assert same == norm
+        if not is_dist_kind(kind):
+            # dist-only knobs are zeroed elsewhere (old key did this)
+            noisy = EngineSpec.from_json(
+                {**spec.to_json(), "exchange": "gather",
+                 "axis": "model"}).normalize()
+            assert noisy == norm
+        else:
+            assert EngineSpec.from_json(
+                {**spec.to_json(), "exchange": "gather"}
+            ).normalize() != norm
+
+
+def test_normalize_zeroes_m_for_non_block_kinds():
+    a = EngineSpec("cell", 2, "sierpinski", 4, m=0).normalize()
+    b = EngineSpec("cell", 2, "sierpinski", 4, m=2).normalize()
+    assert a == b and a.m == 0
+
+
+def test_tuning_key_excludes_tunables():
+    base = _spec_for("pallas-mxu")
+    keys = {
+        EngineSpec.from_json({**base.to_json(), "fusion_k": k,
+                              "macro_p": p}).tuning_key()
+        for k in (None, 1, 2) for p in (None, 2)}
+    assert len(keys) == 1
+    assert _spec_for("block").tuning_key() != base.tuning_key()
+
+
+def test_spec_is_hashable_dict_key():
+    d = {_spec_for(k).normalize(): k for k in KINDS}
+    assert len(d) == len(KINDS)
+
+
+# --------------------------------------------- make_engine spec-first
+def test_make_engine_spec_path_no_warning():
+    spec = EngineSpec("block", 2, "sierpinski", 4, 1, fusion_k=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        eng = make_engine(spec)
+    assert eng.effective_fusion_k == 2
+
+
+def test_make_engine_legacy_shim_warns_and_matches():
+    spec = EngineSpec("block", 2, "sierpinski", 4, 1, fusion_k=2)
+    with pytest.warns(DeprecationWarning, match="EngineSpec"):
+        legacy = make_engine("block", fractals.SIERPINSKI, 4, 1,
+                             workload=LIFE, fusion_k=2)
+    via_spec = make_engine(spec)
+    assert type(legacy) is type(via_spec)
+    s0 = via_spec.init_random(7)
+    np.testing.assert_array_equal(np.asarray(legacy.step(s0)),
+                                  np.asarray(via_spec.step(s0)))
+
+
+# --------------------------------------------------- one cache identity
+def test_runner_spec_and_legacy_share_one_slot():
+    runner = BatchedRunner()
+    spec = EngineSpec("block", 2, "sierpinski", 4, 1, workload="life",
+                      fusion_k=2)
+    e1 = runner.engine_for(spec)
+    e2 = runner.engine_for("block", fractals.SIERPINSKI, 4, m=1,
+                           workload=LIFE, k=2)
+    assert e1 is e2 and runner.stats.builds == 1
+    # the alias kind also lands in the same slot
+    assert runner.engine_for("pallas", fractals.SIERPINSKI, 4, m=1,
+                             k=1) is runner.engine_for(
+        "pallas-strips", fractals.SIERPINSKI, 4, m=1, k=1)
+
+
+def test_serving_bucket_is_normalized_spec():
+    req = SimRequest(frac=fractals.SIERPINSKI, r=4, steps=3, m=1,
+                     kind="pallas", k=None)
+    bucket = req.bucket
+    assert isinstance(bucket, EngineSpec)
+    assert bucket.kind == "pallas-strips"          # alias collapsed
+    assert bucket.fusion_k is not None             # knobs resolved
+    assert bucket == bucket.normalize()            # already normalized
+    # identical requests with spelled-out defaults share the bucket —
+    # and the bucket IS the runner cache key
+    other = SimRequest(frac=fractals.SIERPINSKI, r=4, steps=9, m=1,
+                       kind="pallas-strips", k=bucket.fusion_k)
+    assert other.bucket == bucket
+    runner = BatchedRunner()
+    runner.engine_for(bucket)
+    assert runner.is_cached(other.bucket)

@@ -181,7 +181,8 @@ def test_parse_env():
 
 
 # ------------------------------------------------------- runner wiring
-def test_runner_cache_counters(reg):
+def test_runner_cache_counters(reg, monkeypatch):
+    monkeypatch.setenv("SQUEEZE_TUNING", "off")  # pin the heuristic k
     runner = BatchedRunner(capacity=1)
     states = runner.init_batch("block", FRAC, 4, seeds=range(2), m=1,
                                workload=LIFE)

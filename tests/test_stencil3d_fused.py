@@ -257,7 +257,8 @@ def test_runner_dispatches_3d_states():
     assert exp.shape == (3,) + (frac.side(r),) * 3
 
 
-def test_runner_3d_cache_key_includes_k():
+def test_runner_3d_cache_key_includes_k(monkeypatch):
+    monkeypatch.setenv("SQUEEZE_TUNING", "off")  # pin the heuristic k
     frac, r, m = f3.SIERPINSKI3D, 4, 1  # rho = 2 -> heuristic k = 2
     runner = BatchedRunner()
     e_default = runner.engine_for("block3d", frac, r, m=m, workload=LIFE3D)

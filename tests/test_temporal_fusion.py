@@ -164,7 +164,8 @@ def test_default_fusion_k_heuristic():
         assert 1 <= default_fusion_k(rho) <= rho
 
 
-def test_engine_fusion_k_override():
+def test_engine_fusion_k_override(monkeypatch):
+    monkeypatch.setenv("SQUEEZE_TUNING", "off")  # pin the heuristic k
     frac, r, m = fractals.SIERPINSKI, 5, 2   # rho = 4 -> heuristic k = 2
     assert make_engine("block", frac, r, m).effective_fusion_k == 2
     assert make_engine("block", frac, r, m,
@@ -270,7 +271,8 @@ def test_runner_fused_run_matches_loop():
                 err_msg=f"{kind}/{wl.name}/k={k} batch {b}")
 
 
-def test_runner_cache_key_includes_k():
+def test_runner_cache_key_includes_k(monkeypatch):
+    monkeypatch.setenv("SQUEEZE_TUNING", "off")  # pin the heuristic k
     frac, r, m = fractals.SIERPINSKI, 5, 2
     runner = BatchedRunner()
     e_default = runner.engine_for("block", frac, r, m=m, workload=LIFE)

@@ -1,0 +1,199 @@
+"""The autotuner: tables, precedence, telemetry, sweep quality gates.
+
+* TuningTable JSON persistence: exact round-trip, versioning, diff;
+* knob resolution precedence (explicit > table hit > heuristic) with
+  ``engine.tune.{hit,miss,fallback}`` telemetry, the ``SQUEEZE_TUNING``
+  kill switch and the ``SQUEEZE_TUNING_TABLE`` override;
+* the sweep itself on a tiny config: the winner is parity-exact vs the
+  heuristic engine and never slower than it on the same measurement
+  matrix (the baseline is always swept);
+* the SHIPPED table: loads, covers its preset, and is consulted by
+  ``make_engine``/runner when ``fusion_k`` is left None.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.stencil import make_engine
+from repro.tuning import (Candidate, EngineSpec, TableEntry, TuningTable,
+                          candidate_space, default_table, preset_specs,
+                          reset_default_table_cache, tune_many, tune_spec)
+from repro.tuning.table import DEFAULT_TABLE_PATH, TABLE_VERSION
+from repro.workloads.runner import BatchedRunner
+
+SPEC = EngineSpec("block", 2, "sierpinski", 4, 1, "life")       # rho 2
+MXU = EngineSpec("pallas-mxu", 2, "sierpinski", 4, 1, "life")
+
+
+@pytest.fixture
+def reg():
+    prev = obs.enabled()
+    obs.enable(True)
+    obs.reset()
+    try:
+        yield obs.default_registry()
+    finally:
+        obs.reset()
+        obs.enable(prev)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_table_cache():
+    reset_default_table_cache()
+    yield
+    reset_default_table_cache()
+
+
+# ----------------------------------------------------------- the table
+def test_table_round_trip_and_diff(tmp_path):
+    t = TuningTable()
+    t.put(SPEC, TableEntry(fusion_k=2, meta={"speedup": 1.25}))
+    t.put(MXU, TableEntry(fusion_k=1, macro_p=4))
+    path = str(tmp_path / "t.json")
+    t.save(path)
+    t2 = TuningTable.load(path)
+    assert len(t2) == 2
+    assert t2.get(SPEC).fusion_k == 2
+    assert t2.get(SPEC).meta == {"speedup": 1.25}
+    assert t2.get(MXU).macro_p == 4
+    # different tunables, same identity -> same key (value update)
+    t2.put(SPEC, TableEntry(fusion_k=1))
+    d = t2.diff(t)
+    assert not d["added"] and not d["removed"]
+    assert list(d["changed"]) == [SPEC.tuning_key()]
+
+
+def test_table_version_rejected(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text(json.dumps({"version": TABLE_VERSION + 1,
+                                "entries": {}}))
+    with pytest.raises(ValueError, match="version"):
+        TuningTable.load(str(path))
+
+
+def test_corrupt_table_degrades_to_fallback(tmp_path, monkeypatch, reg):
+    path = tmp_path / "corrupt.json"
+    path.write_text("{not json")
+    monkeypatch.setenv("SQUEEZE_TUNING_TABLE", str(path))
+    reset_default_table_cache()
+    assert default_table() is None  # warned, not raised
+    norm = SPEC.normalize()
+    assert norm.fusion_k == 2      # heuristic (rho=2 -> k=2)
+    assert reg.value("engine.tune.fallback", kind="block") == 1
+
+
+# ------------------------------------------------- resolution precedence
+def test_precedence_explicit_beats_table_beats_heuristic(reg):
+    table = TuningTable()
+    table.put(SPEC, TableEntry(fusion_k=1))
+    # table hit overrides the heuristic (which says 2 for rho=2)
+    assert SPEC.normalize(table=table).fusion_k == 1
+    assert reg.value("engine.tune.hit", kind="block") == 1
+    # explicit knob wins outright — fully resolved, no consult at all
+    expl = dataclasses.replace(SPEC, fusion_k=2)
+    assert expl.normalize(table=table).fusion_k == 2
+    assert reg.value("engine.tune.hit", kind="block") == 1
+    # no entry -> miss + heuristic
+    other = dataclasses.replace(SPEC, r=3)
+    assert other.normalize(table=table).fusion_k == 2
+    assert reg.value("engine.tune.miss", kind="block") == 1
+    # table=None -> heuristic only, silent
+    assert SPEC.normalize(table=None).fusion_k == 2
+
+
+def test_table_k_clamped_to_rho():
+    table = TuningTable()
+    table.put(SPEC, TableEntry(fusion_k=99))
+    assert SPEC.normalize(table=table).fusion_k == SPEC.rho
+
+
+def test_env_kill_switch(monkeypatch, tmp_path, reg):
+    table = TuningTable()
+    table.put(SPEC, TableEntry(fusion_k=1))
+    path = str(tmp_path / "t.json")
+    table.save(path)
+    monkeypatch.setenv("SQUEEZE_TUNING_TABLE", path)
+    reset_default_table_cache()
+    assert SPEC.normalize().fusion_k == 1          # table active
+    monkeypatch.setenv("SQUEEZE_TUNING", "off")
+    assert SPEC.normalize().fusion_k == 2          # heuristic again
+    assert reg.value("engine.tune.fallback", kind="block") == 1
+
+
+def test_runner_consults_override_table(monkeypatch, tmp_path):
+    """End to end: a table entry changes what k=None builds."""
+    table = TuningTable()
+    table.put(SPEC, TableEntry(fusion_k=1))
+    path = str(tmp_path / "t.json")
+    table.save(path)
+    monkeypatch.setenv("SQUEEZE_TUNING_TABLE", path)
+    reset_default_table_cache()
+    runner = BatchedRunner()
+    frac = SPEC.build_frac()
+    eng = runner.engine_for("block", frac, 4, m=1)         # k=None
+    assert eng.effective_fusion_k == 1                     # tuned
+    # ...and shares the slot with the explicit equivalent
+    assert runner.engine_for("block", frac, 4, m=1, k=1) is eng
+
+
+# ------------------------------------------------------------ the sweep
+def test_candidate_space_contains_baseline_and_bounds():
+    cands = candidate_space(SPEC, n_blocks=27)
+    assert Candidate(SPEC.normalize(table=None).fusion_k) in cands
+    assert {c.fusion_k for c in cands} == {1, 2}            # 1..rho
+    assert all(c.macro_p is None for c in cands)            # not MXU
+    mxu = candidate_space(MXU, n_blocks=27)
+    assert any(c.macro_p is not None for c in mxu)
+    assert all(c.macro_p is None or 1 <= c.macro_p <= 27 for c in mxu)
+    with pytest.raises(ValueError, match="no tunable knobs"):
+        candidate_space(EngineSpec("cell", 2, "sierpinski", 4),
+                        n_blocks=27)
+
+
+def test_tune_spec_winner_is_parity_exact_and_not_slower():
+    res = tune_spec(SPEC, steps=4, rounds=2, seed=3)
+    assert not res.parity_failures
+    assert res.baseline.label in res.times
+    assert res.speedup >= 1.0       # baseline is in the sweep
+    # bit-exact CA parity of the recorded winner vs the heuristic
+    win = dataclasses.replace(SPEC, fusion_k=res.best.fusion_k,
+                              macro_p=res.best.macro_p)
+    base = SPEC.normalize(table=None)
+    e_win, e_base = make_engine(win), make_engine(base)
+    out_w = e_win.to_expanded(e_win.run(e_win.init_random(3), 6))
+    out_b = e_base.to_expanded(e_base.run(e_base.init_random(3), 6))
+    np.testing.assert_array_equal(np.asarray(out_w), np.asarray(out_b))
+
+
+def test_tune_many_builds_consultable_table():
+    table, results = tune_many([SPEC], steps=2, rounds=1)
+    assert len(table) == 1 and len(results) == 1
+    entry = table.get(SPEC)
+    assert entry.fusion_k == results[0].best.fusion_k
+    assert SPEC.normalize(table=table).fusion_k == entry.fusion_k
+
+
+# ------------------------------------------------------ the shipped table
+def test_shipped_table_loads_and_covers_presets():
+    shipped = TuningTable.load(DEFAULT_TABLE_PATH)
+    assert len(shipped) >= 1
+    for spec in preset_specs("default"):
+        assert shipped.get(spec) is not None, spec.tuning_key()
+        # shipped winners carry provenance
+        assert "speedup" in shipped.get(spec).meta
+
+
+def test_make_engine_hits_shipped_table(monkeypatch, reg):
+    monkeypatch.delenv("SQUEEZE_TUNING", raising=False)
+    monkeypatch.delenv("SQUEEZE_TUNING_TABLE", raising=False)
+    reset_default_table_cache()
+    spec = preset_specs("ci")[0]            # covered by the shipped table
+    assert spec.fusion_k is None
+    eng = make_engine(spec)
+    assert reg.value("engine.tune.hit", kind=spec.kind) == 1
+    shipped = TuningTable.load(DEFAULT_TABLE_PATH)
+    want = max(1, min(shipped.get(spec).fusion_k, spec.rho))
+    assert eng.effective_fusion_k == want
